@@ -1,0 +1,64 @@
+"""Fig. 4/5/6 analogue: ranking accuracy vs fixed-point bit-width.
+
+Fig. 4: per-graph errors@N / edit@N / NDCG for the 2e6-edge graphs.
+Fig. 5: aggregated MAE / precision@N / Kendall τ over all graphs.
+Fig. 6: sparsity × bit-width sweep (precision@50).
+"""
+from __future__ import annotations
+
+from typing import Dict, List
+
+import numpy as np
+
+from repro.core import PPRConfig, format_for_bits, run_ppr
+from repro.core.metrics import aggregate_reports, full_report
+from repro.graphs import erdos_renyi, paper_graph_suite, ppr_reference
+
+BITS = [14, 16, 18, 20, 22, 24, 26]
+
+
+def _score(g, bits, requests=4, iters=10):
+    rng = np.random.default_rng(1)
+    pers = rng.integers(0, g.num_vertices, requests)
+    ref = ppr_reference(g, pers, iterations=100)
+    got, _ = run_ppr(g, pers, PPRConfig(iterations=iters),
+                     fmt=format_for_bits(bits) if bits else None)
+    return aggregate_reports([full_report(got[:, i], ref[:, i])
+                              for i in range(requests)])
+
+
+def run(scale: float = 0.02) -> List[Dict]:
+    suite = paper_graph_suite(scale=scale)
+    rows = []
+    for name in ["gnp_2e5", "ws_2e5", "pl_2e5"]:          # Fig 4 graphs
+        for bits in BITS:
+            rep = _score(suite[name], bits)
+            rows.append(dict(rep, graph=name, bits=bits, fig="fig4"))
+    # Fig 5: aggregate over the full suite at each bit width
+    for bits in BITS:
+        reps = [_score(g, bits, requests=2) for g in suite.values()]
+        agg = aggregate_reports(reps)
+        rows.append(dict(agg, graph="all", bits=bits, fig="fig5"))
+    # Fig 6: sparsity sweep at fixed |V|
+    v = max(64, int(1e5 * scale))
+    for avg_deg in [2, 10, 50]:
+        g = erdos_renyi(v, v * avg_deg, seed=42)
+        for bits in [16, 20, 26]:
+            rep = _score(g, bits, requests=2)
+            rows.append(dict(rep, graph=f"gnp_deg{avg_deg}", bits=bits, fig="fig6"))
+    return rows
+
+
+def main(scale=0.02):
+    rows = run(scale=scale)
+    print("# Fig4/5/6: name,us_per_call,derived")
+    for r in rows:
+        print(f"ppr_{r['fig']}_{r['graph']}_b{r['bits']},0,"
+              f"ndcg={r['ndcg']:.5f};edit10={r['edit@10']:.2f};"
+              f"errors10={r['errors@10']:.2f};prec50={r['precision@50']:.3f};"
+              f"kendall50={r['kendall@50']:.4f};mae={r['mae']:.2e}")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,70 @@
+"""Fig. 7 analogue: convergence speed, fixed-point vs floating-point.
+
+Measures ‖P_{t+1} − P_t‖₂ per iteration; reports the first iteration where the
+error drops below 1e-6 (the paper's threshold) and where fixed point reaches
+its absorbing state (delta == 0) — the mechanism behind the paper's "2x faster
+convergence ⇒ additional 2x speedup" claim.
+"""
+from __future__ import annotations
+
+from typing import Dict, List
+
+import numpy as np
+
+from repro.core import PPRConfig, format_for_bits, run_ppr
+from repro.graphs import paper_graph_suite
+
+BITS = [20, 26]
+THRESH = 1e-6
+
+
+def iterations_to(deltas: np.ndarray, thresh: float) -> int:
+    hit = np.nonzero(deltas < thresh)[0]
+    return int(hit[0]) + 1 if hit.size else len(deltas) + 1
+
+
+def run(scale: float = 0.02, iters: int = 40) -> List[Dict]:
+    """Multi-threshold view: fixed point's delta sits at its quantization noise
+    floor (≈ √V·2^-f) until it snaps to exactly 0 at the absorbing state —
+    the mechanism behind the paper's Fig. 7 (their lines truncate at 1e-7,
+    which float reaches asymptotically but fixed point reaches *exactly*)."""
+    suite = paper_graph_suite(scale=scale)
+    rng = np.random.default_rng(2)
+    rows = []
+    for name in ["gnp_1e5", "ws_1e5", "pl_1e5", "amazon_like"]:
+        g = suite[name]
+        pers = rng.integers(0, g.num_vertices, 4)
+        cfg = PPRConfig(iterations=iters)
+        _, d_float = run_ppr(g, pers, cfg)
+        d_float = np.asarray(d_float)
+        row = {"graph": name,
+               "float_iters": iterations_to(d_float, THRESH),
+               "float_iters_1e7": iterations_to(d_float, 1e-7),
+               "float_exact": iterations_to(d_float, 0.0) if (d_float == 0).any()
+               else -1}
+        for bits in BITS:
+            _, d = run_ppr(g, pers, cfg, fmt=format_for_bits(bits))
+            d = np.asarray(d)
+            row[f"q{bits}_iters"] = iterations_to(d, THRESH)
+            zero_hit = np.nonzero(d == 0.0)[0]
+            row[f"q{bits}_absorbing"] = int(zero_hit[0]) + 1 if zero_hit.size else -1
+        row["speedup_q26_vs_float"] = row["float_iters"] / max(1, row["q26_iters"])
+        rows.append(row)
+    return rows
+
+
+def main(scale=0.02):
+    rows = run(scale=scale)
+    print("# Fig7: name,us_per_call,derived")
+    for r in rows:
+        print(f"ppr_fig7_{r['graph']},0,"
+              f"float_iters={r['float_iters']};float_1e7={r['float_iters_1e7']};"
+              f"float_exact={r['float_exact']};q26_iters={r['q26_iters']};"
+              f"q20_iters={r['q20_iters']};absorbing_q26={r['q26_absorbing']};"
+              f"absorbing_q20={r['q20_absorbing']};"
+              f"convergence_speedup={r['speedup_q26_vs_float']:.2f}")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,80 @@
+"""Fig. 3 analogue: PPR execution time across bit-widths × 8 graphs.
+
+Measured on this container's CPU (clearly labeled) for *relative* comparisons:
+fixed-point Qm.f vs the F32 reference implementation vs the scipy float64 CPU
+baseline — the paper's three columns.  The projected-TPU column applies the
+roofline byte model (edge stream ∝ bit-width; SpMV is memory-bound), which is
+the mechanism behind the paper's FPGA clock-rate speedups.
+"""
+from __future__ import annotations
+
+import time
+from typing import Dict, List
+
+import numpy as np
+
+from repro.core import PPRConfig, format_for_bits, run_ppr
+from repro.graphs import paper_graph_suite, ppr_reference
+
+BITS = [20, 22, 24, 26]
+
+
+def _time(f, repeat=3):
+    best = float("inf")
+    for _ in range(repeat):
+        t0 = time.perf_counter()
+        f()
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def projected_tpu_time(num_edges: int, kappa: int, bits: int, iters: int) -> float:
+    """Roofline byte model: edge stream (x,y 32b + val `bits`) + P traffic,
+    819 GB/s HBM."""
+    bytes_per_edge = 8 + bits / 8.0
+    p_bytes = 0  # P resident in VMEM (paper: URAM) for the target sizes
+    total = (num_edges * bytes_per_edge + p_bytes) * iters
+    return total / 819e9
+
+
+def run(scale: float = 0.02, requests: int = 8, iters: int = 10) -> List[Dict]:
+    suite = paper_graph_suite(scale=scale)
+    rng = np.random.default_rng(0)
+    rows = []
+    for name, g in suite.items():
+        pers = rng.integers(0, g.num_vertices, requests)
+        cfg = PPRConfig(iterations=iters, kappa=requests)
+        # CPU float64 oracle (PGX stand-in)
+        t_cpu = _time(lambda: ppr_reference(g, pers, iterations=iters))
+        # our float32 architecture (F32 column)
+        run_ppr(g, pers, cfg)  # warm up jit
+        t_f32 = _time(lambda: run_ppr(g, pers, cfg))
+        row = {"graph": name, "V": g.num_vertices, "E": g.num_edges,
+               "cpu_f64_s": t_cpu, "f32_s": t_f32}
+        for bits in BITS:
+            fmt = format_for_bits(bits)
+            run_ppr(g, pers, cfg, fmt=fmt)  # warm up
+            t = _time(lambda: run_ppr(g, pers, cfg, fmt=fmt))
+            row[f"q{bits}_s"] = t
+            row[f"q{bits}_speedup_vs_cpu"] = t_cpu / t
+            row[f"q{bits}_tpu_projected_s"] = projected_tpu_time(
+                g.num_edges, requests, bits, iters)
+        rows.append(row)
+    return rows
+
+
+def main(scale=0.02):
+    rows = run(scale=scale)
+    print("# Fig3: name,us_per_call,derived")
+    for r in rows:
+        for bits in BITS:
+            print(f"ppr_fig3_{r['graph']}_q{bits},{r[f'q{bits}_s']*1e6:.0f},"
+                  f"speedup_vs_cpu={r[f'q{bits}_speedup_vs_cpu']:.2f}"
+                  f";tpu_projected_us={r[f'q{bits}_tpu_projected_s']*1e6:.1f}")
+        print(f"ppr_fig3_{r['graph']}_f32,{r['f32_s']*1e6:.0f},"
+              f"speedup_vs_cpu={r['cpu_f64_s']/r['f32_s']:.2f}")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,37 @@
+"""Benchmark harness — one function per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run [--scale 0.02] [--full]
+
+Prints ``name,us_per_call,derived`` CSV per row.  --full uses the paper's
+graph sizes (|V| = 1e5/2e5, |E| ≈ 1e6/2e6 — minutes on CPU); default scale
+runs in ~2 minutes.
+"""
+from __future__ import annotations
+
+import argparse
+
+from benchmarks import bench_accuracy, bench_convergence, bench_ppr, bench_spmv
+from benchmarks import roofline_report
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--scale", type=float, default=0.02)
+    ap.add_argument("--full", action="store_true", help="paper-size graphs")
+    args = ap.parse_args()
+    scale = 1.0 if args.full else args.scale
+
+    print("## bench_ppr (paper Fig. 3: speedup vs bit-width x 8 graphs)")
+    bench_ppr.main(scale=scale)
+    print("\n## bench_accuracy (paper Figs. 4/5/6: accuracy vs bit-width)")
+    bench_accuracy.main(scale=scale)
+    print("\n## bench_convergence (paper Fig. 7: fixed vs float convergence)")
+    bench_convergence.main(scale=scale)
+    print("\n## bench_spmv (paper Table 2 analogue: kernel characterization)")
+    bench_spmv.main(scale=scale)
+    print("\n## roofline (dry-run artifacts; EXPERIMENTS.md section Roofline)")
+    roofline_report.main()
+
+
+if __name__ == "__main__":
+    main()

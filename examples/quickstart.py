@@ -1,0 +1,30 @@
+"""Quickstart: reduced-precision Personalized PageRank in 30 lines.
+
+    PYTHONPATH=src python examples/quickstart.py
+
+Builds a small power-law graph, runs batched PPR at the paper's Q1.25
+fixed-point format, and compares the top-10 ranking against the float64
+oracle — the whole paper in miniature.
+"""
+import numpy as np
+
+from repro.core import PPRConfig, Q1_25, run_ppr
+from repro.core.metrics import full_report, topk_indices
+from repro.graphs import holme_kim_powerlaw, ppr_reference
+
+# 1. a social-network-like graph (Holme–Kim powerlaw, paper Table 1)
+g = holme_kim_powerlaw(5000, m=8, seed=0)
+print(f"graph: |V|={g.num_vertices:,} |E|={g.num_edges:,} sparsity={g.sparsity:.1e}")
+
+# 2. personalized PageRank for 4 users at once (κ-batching), 26-bit fixed point
+users = np.array([17, 42, 1337, 4242])
+scores, deltas = run_ppr(g, users, PPRConfig(iterations=10, kappa=4), fmt=Q1_25)
+
+# 3. compare against the converged float64 CPU oracle
+ref = ppr_reference(g, users, iterations=100)
+for i, u in enumerate(users):
+    rep = full_report(scores[:, i], ref[:, i])
+    top = topk_indices(scores[:, i], 5)
+    print(f"user {u:5d}: top-5 recs {top.tolist()}  "
+          f"NDCG={rep['ndcg']:.4f} edit@10={rep['edit@10']}")
+print(f"fixed-point converged to absorbing state: delta trace {deltas[-3:]}")

@@ -1,0 +1,21 @@
+# The paper's primary contribution: reduced-precision streaming COO SpMV + PPR.
+from repro.core.coo import BlockedCOO, COOGraph
+from repro.core.fixed_point import (
+    BITWIDTH_TO_FORMAT,
+    PAPER_FORMATS,
+    Q1_19,
+    Q1_21,
+    Q1_23,
+    Q1_25,
+    QFormat,
+    format_for_bits,
+)
+from repro.core.ppr import PPRConfig, batched_ppr, make_ppr_fixed, ppr_float, run_ppr
+from repro.core.spmv import spmv_fixed, spmv_float, spmv_pallas
+
+__all__ = [
+    "COOGraph", "BlockedCOO", "QFormat", "format_for_bits",
+    "Q1_19", "Q1_21", "Q1_23", "Q1_25", "PAPER_FORMATS", "BITWIDTH_TO_FORMAT",
+    "PPRConfig", "run_ppr", "batched_ppr", "ppr_float", "make_ppr_fixed",
+    "spmv_float", "spmv_fixed", "spmv_pallas",
+]

@@ -1,0 +1,164 @@
+"""Reduced-precision unsigned fixed-point (Qm.f) arithmetic — the paper's §4.1 datapath.
+
+The paper stores PPR values as unsigned fixed-point Q1.25 / Q1.23 / Q1.21 / Q1.19
+(1 integer bit, f fractional bits) and *truncates* towards zero on quantization
+("Other policies (e.g. rounding to the closest representable value) resulted in
+numerical instability").
+
+Two computation paths, bit-identical by construction (tested in
+tests/test_fixed_point.py):
+
+1. **Exact integer path** (`FixedMul` via 16-bit limbs).  TPU VPUs have no 64-bit
+   multiplier, so a Q1.f × Q1.f product (needs 2(1+f) ≤ 52 bits) is decomposed into
+   16×16→32-bit limb products in uint32 — every intermediate fits.  This is the
+   bit-exact oracle and also what the Pallas kernel executes.
+
+2. **Float-grid fast path** (`quantize_f32`).  f32 compute followed by truncation to
+   the 2^-f grid.  Exactly equal to (1) while products stay inside the 24-bit f32
+   mantissa; used for wide-κ batched SpMM where the MXU (which is f32/bf16-only)
+   does the aggregation.  For f > 23 the integer path is authoritative.
+
+All ops are jittable and shape-polymorphic.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Union
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Array = jax.Array
+
+_U32 = jnp.uint32
+_MASK16 = np.uint32(0xFFFF)
+
+
+@dataclasses.dataclass(frozen=True)
+class QFormat:
+    """Unsigned Qm.f fixed point: ``int_bits`` integer bits, ``frac_bits`` fractional."""
+
+    int_bits: int
+    frac_bits: int
+
+    def __post_init__(self):
+        if self.int_bits < 1 or self.frac_bits < 0:
+            raise ValueError(f"bad QFormat({self.int_bits},{self.frac_bits})")
+        if self.total_bits > 32:
+            raise ValueError("QFormat wider than 32 bits is not supported")
+
+    @property
+    def total_bits(self) -> int:
+        return self.int_bits + self.frac_bits
+
+    @property
+    def scale(self) -> int:
+        return 1 << self.frac_bits
+
+    @property
+    def max_raw(self) -> int:
+        return (1 << self.total_bits) - 1
+
+    @property
+    def resolution(self) -> float:
+        return 1.0 / self.scale
+
+    @property
+    def name(self) -> str:
+        return f"Q{self.int_bits}.{self.frac_bits}"
+
+    # ---- conversions -------------------------------------------------------
+    def from_float(self, x: Union[Array, np.ndarray, float]) -> Array:
+        """Encode float → raw uint32, truncating towards zero (paper's policy)."""
+        x = jnp.asarray(x, jnp.float64 if jax.config.jax_enable_x64 else jnp.float32)
+        raw = jnp.floor(jnp.clip(x, 0.0, None) * self.scale)
+        raw = jnp.minimum(raw, float(self.max_raw))
+        return raw.astype(_U32)
+
+    def to_float(self, raw: Array, dtype=jnp.float32) -> Array:
+        return raw.astype(dtype) / jnp.asarray(self.scale, dtype)
+
+    # ---- arithmetic on raw uint32 ------------------------------------------
+    def mul(self, a: Array, b: Array) -> Array:
+        """Bit-exact (a*b) >> f using 16-bit limb decomposition in uint32.
+
+        a,b < 2^total_bits with total_bits ≤ 32.  Write a = a1·2^16 + a0:
+          a·b = a1b1·2^32 + (a1b0 + a0b1)·2^16 + a0b0
+        Each limb product is a 16×16→32 multiply (fits uint32); the f-bit right
+        shift is applied per partial product with the cross-term carries folded
+        in explicitly.  Matches Python's ``(a*b) >> f`` for all inputs (hypothesis
+        tested) as long as the true product fits in 64 bits — always true here.
+        """
+        a = a.astype(_U32)
+        b = b.astype(_U32)
+        f = self.frac_bits
+        a0 = a & _MASK16
+        a1 = a >> 16
+        b0 = b & _MASK16
+        b1 = b >> 16
+        ll = a0 * b0                      # bits [0, 32)
+        lh = a0 * b1                      # bits [16, 48)
+        hl = a1 * b0                      # bits [16, 48)
+        hh = a1 * b1                      # bits [32, 64)
+        # mid = lh + hl may carry into bit 33: track the carry explicitly.
+        mid = lh + hl
+        mid_carry = (mid < lh).astype(_U32)         # 1 iff wrapped
+        # Accumulate low 64 bits as (hi, lo) pair of uint32.
+        lo = ll + (mid << 16)
+        carry_lo = (lo < ll).astype(_U32)
+        hi = hh + (mid >> 16) + (mid_carry << 16) + carry_lo
+        # result = (hi·2^32 + lo) >> f ; result must fit 32 bits (guaranteed when
+        # inputs are in-format: product < 2^(2·total) and 2·total − f ≤ 32+int_bits).
+        if f == 0:
+            return lo
+        if f < 32:
+            return (lo >> f) | (hi << (32 - f))
+        if f == 32:  # pragma: no cover - unreachable for ≤32-bit formats
+            return hi
+        return hi >> (f - 32)
+
+    def add(self, a: Array, b: Array) -> Array:
+        """Saturating add on raw values."""
+        s = a.astype(_U32) + b.astype(_U32)
+        wrapped = s < a.astype(_U32)
+        over = wrapped | (s > np.uint32(self.max_raw))
+        return jnp.where(over, np.uint32(self.max_raw), s)
+
+    def quantize_raw(self, raw_wide_float: Array) -> Array:
+        """Clamp an f32/f64 'raw-units' value into the format (truncate)."""
+        r = jnp.floor(jnp.clip(raw_wide_float, 0.0, float(self.max_raw)))
+        return r.astype(_U32)
+
+    # ---- float-grid fast path ------------------------------------------------
+    def quantize_f32(self, x: Array) -> Array:
+        """Truncate an f32 value to the Qm.f grid (the paper's quantizer).
+
+        quantize(x) = floor(x · 2^f) / 2^f, clipped into [0, max].  Matches the
+        integer path bit-for-bit while values are exactly representable in f32.
+        """
+        scale = jnp.asarray(self.scale, x.dtype)
+        q = jnp.floor(jnp.clip(x, 0.0, None) * scale)
+        q = jnp.minimum(q, jnp.asarray(float(self.max_raw), x.dtype))
+        return q / scale
+
+
+# The paper's four evaluated formats plus the f32 reference label.
+Q1_25 = QFormat(1, 25)
+Q1_23 = QFormat(1, 23)
+Q1_21 = QFormat(1, 21)
+Q1_19 = QFormat(1, 19)
+
+PAPER_FORMATS = {
+    "Q1.25": Q1_25,  # "26 bits"
+    "Q1.23": Q1_23,  # "24 bits"
+    "Q1.21": Q1_21,  # "22 bits"
+    "Q1.19": Q1_19,  # "20 bits"
+}
+
+BITWIDTH_TO_FORMAT = {26: Q1_25, 24: Q1_23, 22: Q1_21, 20: Q1_19}
+
+
+def format_for_bits(bits: int) -> QFormat:
+    """Paper convention: 'b bits' = Q1.(b-1) unsigned."""
+    return BITWIDTH_TO_FORMAT.get(bits, QFormat(1, bits - 1))

@@ -1,0 +1,100 @@
+"""IR ranking metrics for PPR accuracy (paper §5.3.1, Figs. 4-6).
+
+All metrics compare an approximate ranking (fixed-point FPGA analogue) against a
+converged reference ranking (the CPU float64 oracle).
+
+- num_errors@N  : vertices whose position in the top-N differs (coarse; the
+                  paper's example {2,4,8,6} vs {4,8,6,2} → 4 errors).
+- edit_distance@N : Levenshtein distance between top-N sequences.
+- NDCG          : rel_i = |V| − i (paper's relevance), log2 discount, normalized
+                  by the reference's ideal DCG.
+- precision@N   : |topN_approx ∩ topN_ref| / N (order-insensitive).
+- kendall_tau@N : pairwise order agreement on the reference top-N.
+- MAE           : mean |score_approx − score_ref| over all vertices.
+"""
+from __future__ import annotations
+
+from typing import Sequence
+
+import numpy as np
+
+
+def topk_indices(scores: np.ndarray, k: int) -> np.ndarray:
+    """Indices of the k largest scores, ties broken by vertex id (deterministic)."""
+    scores = np.asarray(scores)
+    # argsort on (-score, idx): stable deterministic ranking
+    order = np.lexsort((np.arange(scores.shape[0]), -scores))
+    return order[:k]
+
+
+def num_errors(approx: np.ndarray, ref: np.ndarray, n: int) -> int:
+    ta = topk_indices(approx, n)
+    tr = topk_indices(ref, n)
+    return int((ta != tr).sum())
+
+
+def edit_distance(approx: np.ndarray, ref: np.ndarray, n: int) -> int:
+    """Levenshtein distance between the two top-N vertex sequences."""
+    a = topk_indices(approx, n).tolist()
+    b = topk_indices(ref, n).tolist()
+    la, lb = len(a), len(b)
+    prev = list(range(lb + 1))
+    for i in range(1, la + 1):
+        cur = [i] + [0] * lb
+        for j in range(1, lb + 1):
+            cost = 0 if a[i - 1] == b[j - 1] else 1
+            cur[j] = min(prev[j] + 1, cur[j - 1] + 1, prev[j - 1] + cost)
+        prev = cur
+    return int(prev[lb])
+
+
+def ndcg(approx: np.ndarray, ref: np.ndarray, n: int | None = None) -> float:
+    """Paper's NDCG: rel of vertex = |V| − (its reference rank); DCG over the
+    approx ordering; normalized by the reference (ideal) DCG."""
+    v = ref.shape[0]
+    n = n or v
+    ref_order = topk_indices(ref, v)
+    rel = np.empty(v, np.float64)
+    rel[ref_order] = v - np.arange(v)          # rel_i = |V| - rank_i
+    approx_order = topk_indices(approx, n)
+    discounts = 1.0 / np.log2(np.arange(1, n + 1) + 1)
+    dcg = float((rel[approx_order] * discounts).sum())
+    idcg = float((rel[ref_order[:n]] * discounts).sum())
+    return dcg / idcg if idcg > 0 else 1.0
+
+
+def precision_at(approx: np.ndarray, ref: np.ndarray, n: int) -> float:
+    ta = set(topk_indices(approx, n).tolist())
+    tr = set(topk_indices(ref, n).tolist())
+    return len(ta & tr) / float(n)
+
+
+def kendall_tau(approx: np.ndarray, ref: np.ndarray, n: int) -> float:
+    """Kendall's τ-b restricted to the reference top-N vertices."""
+    import scipy.stats as st
+
+    idx = topk_indices(ref, n)
+    tau, _ = st.kendalltau(ref[idx], approx[idx])
+    return float(tau) if np.isfinite(tau) else 1.0
+
+
+def mae(approx: np.ndarray, ref: np.ndarray) -> float:
+    return float(np.abs(np.asarray(approx, np.float64) - np.asarray(ref, np.float64)).mean())
+
+
+def full_report(approx: np.ndarray, ref: np.ndarray,
+                ns: Sequence[int] = (10, 20, 50)) -> dict:
+    """All paper metrics for one (approx, ref) score-vector pair."""
+    rep = {"mae": mae(approx, ref), "ndcg": ndcg(approx, ref, max(ns))}
+    for n in ns:
+        rep[f"errors@{n}"] = num_errors(approx, ref, n)
+        rep[f"edit@{n}"] = edit_distance(approx, ref, n)
+        rep[f"precision@{n}"] = precision_at(approx, ref, n)
+        rep[f"kendall@{n}"] = kendall_tau(approx, ref, n)
+    return rep
+
+
+def aggregate_reports(reports: Sequence[dict]) -> dict:
+    """Mean of each metric over a batch of personalization vertices."""
+    keys = reports[0].keys()
+    return {k: float(np.mean([r[k] for r in reports])) for k in keys}

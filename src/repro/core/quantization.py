@@ -1,0 +1,80 @@
+"""The paper's truncation quantizer lifted to LM weights/activations/gradients.
+
+Three framework features derive from the paper's reduced-precision insight:
+
+1. ``quantize_weights`` — per-channel symmetric int8 (or Qm.f) weight
+   quantization for the serving path (feeds kernels/fixed_matmul).
+2. ``truncate_to_grid`` — the exact paper quantizer (floor to 2^-f grid) as a
+   reusable activation op.
+3. ``ErrorFeedbackQuantizer`` — gradient compression for the data-parallel
+   all-reduce: q = trunc(g + residual); residual' = (g + residual) − q.  The
+   residual carries the truncation error to the next step, so the compressed
+   SGD trajectory stays unbiased in the long run (error-feedback SGD).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.fixed_point import QFormat
+
+Array = jax.Array
+
+
+def truncate_to_grid(x: Array, frac_bits: int) -> Array:
+    """Signed truncation-toward-zero to the 2^-f grid (paper policy, signed ext)."""
+    scale = jnp.asarray(float(1 << frac_bits), x.dtype)
+    return jnp.trunc(x * scale) / scale
+
+
+class QuantizedTensor(NamedTuple):
+    """Per-channel symmetric quantized tensor: w ≈ q * scale[None, :]."""
+
+    q: Array       # int8 [in, out]
+    scale: Array   # f32 [out]
+
+
+def quantize_weights(w: Array, bits: int = 8) -> QuantizedTensor:
+    """Per-output-channel symmetric quantization with truncation rounding."""
+    maxq = float(2 ** (bits - 1) - 1)
+    absmax = jnp.max(jnp.abs(w), axis=0)
+    scale = jnp.where(absmax > 0, absmax / maxq, 1.0).astype(jnp.float32)
+    q = jnp.trunc(w / scale[None, :])
+    q = jnp.clip(q, -maxq - 1, maxq).astype(jnp.int8)
+    return QuantizedTensor(q=q, scale=scale)
+
+
+def dequantize(qt: QuantizedTensor, dtype=jnp.float32) -> Array:
+    return qt.q.astype(dtype) * qt.scale[None, :].astype(dtype)
+
+
+@dataclasses.dataclass(frozen=True)
+class ErrorFeedbackQuantizer:
+    """Gradient compressor: truncate to f fractional bits with residual feedback.
+
+    Used inside the DP all-reduce: devices quantize their local gradient shard,
+    all-reduce the cheap representation, and keep the truncation error locally
+    to add back next step.  With f bits the wire format is (f + int_bits + sign)
+    bits vs 32 — e.g. f=12 → ~2.4x collective-bytes reduction (§Perf).
+    """
+
+    frac_bits: int = 12
+
+    def init_state(self, grads):
+        return jax.tree.map(jnp.zeros_like, grads)
+
+    def compress(self, grads, residuals) -> Tuple:
+        def one(g, r):
+            corrected = g + r
+            q = truncate_to_grid(corrected, self.frac_bits)
+            return q, corrected - q
+
+        flat = jax.tree.map(one, grads, residuals)
+        q = jax.tree.map(lambda t: t[0], flat,
+                         is_leaf=lambda t: isinstance(t, tuple) and len(t) == 2)
+        new_res = jax.tree.map(lambda t: t[1], flat,
+                               is_leaf=lambda t: isinstance(t, tuple) and len(t) == 2)
+        return q, new_res

@@ -1,0 +1,206 @@
+"""Logical-axis sharding rules → NamedSharding (MaxText-style, DESIGN.md §6).
+
+Parameter rules are path-based over the params pytree; activation/cache rules
+are small helpers.  Everything is a *global-view* pjit sharding: the model code
+stays mesh-agnostic, and an optional sharding context lets the forward pass
+pin residual-stream activations (sequence parallelism).
+
+Mesh axes: ("data", "model") single-pod, ("pod", "data", "model") multi-pod.
+"data" composes with "pod" for batch parallelism.
+"""
+from __future__ import annotations
+
+import re
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+# ---------------------------------------------------------------------------
+# global sharding context (set by launch/train/serve; no-op when unset)
+# ---------------------------------------------------------------------------
+_CTX: dict = {"mesh": None, "batch_axes": None, "seq_axis": None}
+
+
+def set_sharding_context(mesh: Optional[Mesh], *, sequence_parallel: bool = True):
+    if mesh is None:
+        _CTX.update(mesh=None, batch_axes=None, seq_axis=None)
+        return
+    batch = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    _CTX.update(
+        mesh=mesh,
+        batch_axes=batch if batch else None,
+        seq_axis="model" if sequence_parallel and "model" in mesh.axis_names else None,
+    )
+
+
+def shard_activation(x, kind: str = "residual"):
+    """Constraint for [B, S, D] activations: batch→(pod,data), seq→model (SP)."""
+    mesh = _CTX["mesh"]
+    if mesh is None:
+        return x
+    spec = P(_CTX["batch_axes"], _CTX["seq_axis"], None)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+def constrain(x, spec: P):
+    """Raw with_sharding_constraint under the context mesh (no-op unset)."""
+    mesh = _CTX["mesh"]
+    if mesh is None:
+        return x
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+def batch_axes():
+    return _CTX["batch_axes"]
+
+
+def moe_mode(num_experts: int) -> Optional[str]:
+    """'ep' when experts divide the model axis, else 'tp' (shard d_ff)."""
+    mesh = _CTX["mesh"]
+    if mesh is None or "model" not in mesh.axis_names:
+        return None
+    m = mesh.shape["model"]
+    return "ep" if num_experts % m == 0 else "tp"
+
+
+# ---------------------------------------------------------------------------
+# parameter shardings (path-pattern rules)
+# ---------------------------------------------------------------------------
+# (regex over the flattened key path, PartitionSpec applied to the LAST dims;
+#  leading stacked dims [reps, g] are always unsharded)
+_PARAM_RULES = [
+    (r"embed$", P("model", None)),                 # vocab-sharded table
+    (r"unembed$", P(None, "model")),
+    (r"pos_embed$|enc_pos$", P(None, None)),
+    (r"patch_proj$", P(None, None)),
+    # attention projections (tail dims after the stacked prefix)
+    (r"(attn|cross)/wq$", P(None, "model")),
+    (r"(attn|cross)/wk$", P(None, "model")),
+    (r"(attn|cross)/wv$", P(None, "model")),
+    (r"(attn|cross)/wo$", P("model", None)),
+    (r"(attn|cross)/(q_norm|k_norm)$", P(None)),
+    # dense MLP
+    (r"mlp/w_gate$|mlp/w_up$|mlp/w_fc$", P(None, "model")),
+    (r"mlp/w_down$|mlp/w_proj$", P("model", None)),
+    (r"mlp/b_fc$", P("model")),
+    (r"mlp/b_proj$", P(None)),
+    # MoE (expert parallelism over "model")
+    (r"moe/router$", P(None, None)),
+    (r"moe/w_gate$|moe/w_up$", P("model", None, None)),
+    (r"moe/w_down$", P("model", None, None)),
+    # mamba2
+    (r"mamba/w_in$", P(None, "model")),
+    (r"mamba/conv_w$", P(None, "model")),
+    (r"mamba/conv_b$", P("model")),
+    (r"mamba/(A_log|D|dt_bias)$", P("model")),
+    (r"mamba/norm_w$", P("model")),
+    (r"mamba/w_out$", P("model", None)),
+    # norms & everything else: replicated
+    (r".*", P()),
+]
+
+
+def _path_str(path) -> str:
+    parts = []
+    for k in path:
+        if hasattr(k, "key"):
+            parts.append(str(k.key))
+        elif hasattr(k, "idx"):
+            parts.append(str(k.idx))
+        else:
+            parts.append(str(k))
+    return "/".join(parts)
+
+
+def _spec_for(path_s: str, ndim: int) -> P:
+    for pat, spec in _PARAM_RULES:
+        if re.search(pat, path_s):
+            tail = tuple(spec)
+            if len(tail) > ndim:  # scalar-ish params
+                tail = tail[-ndim:] if ndim else ()
+            pad = (None,) * (ndim - len(tail))
+            return P(*(pad + tail))
+    return P()
+
+
+def param_shardings(params_shape: Any, mesh: Mesh, cfg=None):
+    """Pytree of NamedSharding matching an (eval_shape) params pytree.
+
+    MoE rule is config-dependent: experts→"model" (EP) when num_experts divides
+    the model axis; otherwise TP inside each expert (shard d_ff) — e.g. mixtral
+    E=8 on a 16-way axis."""
+    model_size = mesh.shape.get("model", 1)
+    moe_tp = bool(cfg and cfg.num_experts and cfg.num_experts % model_size != 0)
+
+    def one(path, leaf):
+        ps = _path_str(path)
+        nd = len(leaf.shape)
+        if moe_tp and re.search(r"moe/(w_gate|w_up)$", ps):
+            return NamedSharding(mesh, P(*([None] * (nd - 1) + ["model"])))   # F
+        if moe_tp and re.search(r"moe/w_down$", ps):
+            spec = [None] * nd
+            spec[-2] = "model"                                                # F
+            return NamedSharding(mesh, P(*spec))
+        return NamedSharding(mesh, _spec_for(ps, nd))
+
+    return jax.tree_util.tree_map_with_path(one, params_shape)
+
+
+# ---------------------------------------------------------------------------
+# batch / cache shardings
+# ---------------------------------------------------------------------------
+def _batch_axes(mesh) -> Any:
+    axes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    return axes if axes else None
+
+
+def batch_shardings(batch_shape: Any, mesh: Mesh, batch_divisible: bool = True):
+    """tokens/targets [B,S] → batch over (pod,data); stub embeddings likewise."""
+    dp = _batch_axes(mesh) if batch_divisible else None
+
+    def one(leaf):
+        nd = len(leaf.shape)
+        if nd == 0:
+            return NamedSharding(mesh, P())
+        return NamedSharding(mesh, P(dp, *([None] * (nd - 1))))
+
+    return jax.tree.map(one, batch_shape)
+
+
+def cache_shardings(cache_shape: Any, mesh: Mesh, batch: int):
+    """Decode cache rule (DESIGN.md §6): batch→(pod,data) when divisible,
+    cache sequence→"model" (uniform rule that works for every kv_heads count,
+    including MQA kv=1; head-sharding is the §Perf alternative)."""
+    dp = _batch_axes(mesh)
+    n_dp = 1
+    for a in (dp or ()):
+        n_dp *= mesh.shape[a]
+    dp = dp if (dp and batch % n_dp == 0) else None
+
+    model_size = mesh.shape.get("model", 1)
+
+    def one(path, leaf):
+        nd = len(leaf.shape)
+        ps = _path_str(path)
+        if re.search(r"(^|/)(ck|cv)$", ps) and nd >= 4:
+            # cross-attention cache [..., B, enc, KV, hd]: enc_len (1500) does
+            # not divide the axis — shard kv-heads instead (whisper kv=16)
+            spec = [None] * nd
+            spec[-4] = dp
+            spec[-2] = "model" if leaf.shape[-2] % model_size == 0 else None
+            return NamedSharding(mesh, P(*spec))
+        if re.search(r"(^|/)(k|v)$", ps) and nd >= 4:
+            # [..., B, S, KV, hd] — batch and sequence are dims -4/-3
+            spec = [None] * nd
+            spec[-4] = dp
+            spec[-3] = "model"
+            return NamedSharding(mesh, P(*spec))
+        if ps.endswith("conv") and nd == 4:      # [L, B, K-1, conv_dim]
+            return NamedSharding(mesh, P(None, dp, None, "model"))
+        if ps.endswith("ssd") and nd == 5:       # [L, B, nh, hd, state]
+            return NamedSharding(mesh, P(None, dp, "model", None, None))
+        return NamedSharding(mesh, P(*([None] * nd)))
+
+    return jax.tree_util.tree_map_with_path(one, cache_shape)

@@ -1,0 +1,20 @@
+"""Pallas TPU kernels for the paper's compute hot-spots.
+
+- coo_spmv:        the paper's streaming COO SpMM (packets → VMEM tiles →
+                   MXU one-hot scatter), float and bit-exact fixed-point.
+- fixed_matmul:    reduced-precision (int8 / Qm.f) serving matmul.
+- flash_attention: fused blocked attention for the LM stack (causal /
+                   local-window / GQA) — the framework's own hot-spot.
+
+ops.py holds the jit'd wrappers; ref.py the pure-jnp oracles every kernel is
+validated against (interpret=True) in tests/.
+"""
+from repro.kernels import ops, ref
+from repro.kernels.coo_spmv import coo_spmv_pallas
+from repro.kernels.fixed_matmul import quantized_matmul_pallas
+from repro.kernels.flash_attention import flash_attention_gqa, flash_attention_pallas
+
+__all__ = [
+    "ops", "ref", "coo_spmv_pallas", "quantized_matmul_pallas",
+    "flash_attention_pallas", "flash_attention_gqa",
+]

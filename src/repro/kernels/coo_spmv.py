@@ -1,0 +1,161 @@
+"""Pallas TPU kernel: streaming COO SpMM (the paper's §4.1.1 pipeline).
+
+TPU mapping of the FPGA architecture (DESIGN.md §2):
+
+  FPGA                                  TPU (this kernel)
+  ----------------------------------    ----------------------------------------
+  DRAM burst read, 256-bit packets      HBM→VMEM streaming: 1-D grid over edge
+                                        packets; BlockSpec auto double-buffers
+  URAM-resident P_t                     VMEM-resident (v_tile × K) src slice of P,
+                                        selected per packet via scalar-prefetched
+                                        packet→src-block map
+  B×B comparator crossbar aggregator    one-hot MXU matmul:
+                                        acc += onehot(x_local)ᵀ @ (val·P[y_local])
+  FSM, 2 buffers, 1 write per block     Pallas output revisiting: consecutive
+                                        packets of one dst block accumulate in
+                                        VMEM; the block is written to HBM once,
+                                        when the dst index advances
+  fixed-point DSP multiply              uint32 16-bit-limb multiply (bit-exact)
+
+Grid: one step per packet (PACKET edges).  Scalar-prefetch arrays give each
+packet its (dst_block, src_block) and a first-packet-of-dst-block flag.
+Packets are dst-major sorted, so each output block is revisited consecutively
+— the same "write each block exactly once" discipline as the paper's FSM.
+
+Roofline choice of tile sizes (§Perf): the one-hot matmul costs
+2·v_tile·K flop/edge vs 12 B/edge of HBM traffic.  Compute-bound iff
+2·v_tile·K/12 > 240 flop/B (v5e ridge) ⇒ keep v_tile·K ≲ 1440·K... see
+EXPERIMENTS.md §Perf for the measured iteration.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core.fixed_point import QFormat
+
+_MASK16 = np.uint32(0xFFFF)
+
+
+def _fixed_mul_u32(a, b, frac_bits: int):
+    """Bit-exact (a*b) >> f on uint32 via 16-bit limbs (no 64-bit ops) — the
+    in-kernel replica of QFormat.mul, kept local so the kernel body has no
+    host-side dependencies."""
+    a0 = a & _MASK16
+    a1 = a >> 16
+    b0 = b & _MASK16
+    b1 = b >> 16
+    ll = a0 * b0
+    lh = a0 * b1
+    hl = a1 * b0
+    hh = a1 * b1
+    mid = lh + hl
+    mid_carry = (mid < lh).astype(jnp.uint32)
+    lo = ll + (mid << 16)
+    carry_lo = (lo < ll).astype(jnp.uint32)
+    hi = hh + (mid >> 16) + (mid_carry << 16) + carry_lo
+    f = frac_bits
+    return (lo >> f) | (hi << (32 - f))
+
+
+def _kernel_float(dst_blk, src_blk, first, x_ref, y_ref, val_ref, p_ref, out_ref):
+    """One grid step = one packet of edges.
+
+    x_ref/y_ref/val_ref: [1, PACKET] edge slices (this packet).
+    p_ref:   [v_tile, K]  source slice of P (selected by src_blk[i]).
+    out_ref: [v_tile, K]  destination accumulator (selected by dst_blk[i]).
+    """
+    i = pl.program_id(0)
+
+    @pl.when(first[i] == 1)
+    def _zero():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    x = x_ref[0, :].astype(jnp.int32)            # [P] local dst (u16-packed ok)
+    y = y_ref[0, :].astype(jnp.int32)            # [P] local src
+    val = val_ref[0, :]                          # [P]
+    # stage 2 (paper): edge-wise multiply val[j] * P[y[j], :]
+    gathered = p_ref[y, :]                       # [P, K] VMEM gather
+    contrib = val[:, None] * gathered            # [P, K]
+    # stage 3 (paper): aggregation — the B×B crossbar as a one-hot matmul
+    v_tile = out_ref.shape[0]
+    onehot = (x[:, None] == jax.lax.broadcasted_iota(jnp.int32, (x.shape[0], v_tile), 1))
+    out_ref[...] += jnp.dot(
+        onehot.astype(contrib.dtype).T, contrib,
+        preferred_element_type=out_ref.dtype,
+    )
+
+
+def _kernel_fixed(frac_bits, dst_blk, src_blk, first,
+                  x_ref, y_ref, val_ref, p_ref, out_ref):
+    """Fixed-point variant: raw uint32 values, truncating limb multiply, exact
+    integer aggregation (int32 one-hot matmul)."""
+    i = pl.program_id(0)
+
+    @pl.when(first[i] == 1)
+    def _zero():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    x = x_ref[0, :].astype(jnp.int32)
+    y = y_ref[0, :].astype(jnp.int32)
+    val = val_ref[0, :]
+    gathered = p_ref[y, :]                        # [P, K] uint32 raw
+    contrib = _fixed_mul_u32(val[:, None], gathered, frac_bits)
+    v_tile = out_ref.shape[0]
+    onehot = (x[:, None] == jax.lax.broadcasted_iota(jnp.int32, (x.shape[0], v_tile), 1))
+    acc = jnp.dot(onehot.astype(jnp.int32).T, contrib.astype(jnp.int32),
+                  preferred_element_type=jnp.int32)
+    out_ref[...] += acc.astype(jnp.uint32)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("v_tile", "packet", "n_dst", "num_packets", "frac_bits", "interpret"),
+)
+def coo_spmv_pallas(
+    x_local: jax.Array,       # [num_packets, packet] int32, dst index local to tile
+    y_local: jax.Array,       # [num_packets, packet] int32, src index local to tile
+    val: jax.Array,           # [num_packets, packet] f32 (or uint32 raw if fixed)
+    p: jax.Array,             # [n_src * v_tile, K]
+    packet_dst: jax.Array,    # [num_packets] int32  packet → dst block
+    packet_src: jax.Array,    # [num_packets] int32  packet → src block
+    packet_first: jax.Array,  # [num_packets] int32  1 = first packet of dst block
+    *,
+    v_tile: int,
+    packet: int,
+    n_dst: int,
+    num_packets: int,
+    frac_bits: Optional[int] = None,
+    interpret: bool = True,
+) -> jax.Array:
+    """Returns out [n_dst * v_tile, K]; dst blocks with no packets are NOT
+    written (caller masks them — see ops.coo_spmv)."""
+    k = p.shape[-1]
+    out_dtype = p.dtype
+    kernel = (
+        _kernel_float if frac_bits is None
+        else functools.partial(_kernel_fixed, frac_bits)
+    )
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=3,
+        grid=(num_packets,),
+        in_specs=[
+            pl.BlockSpec((1, packet), lambda i, pd, ps, pf: (i, 0)),   # x
+            pl.BlockSpec((1, packet), lambda i, pd, ps, pf: (i, 0)),   # y
+            pl.BlockSpec((1, packet), lambda i, pd, ps, pf: (i, 0)),   # val
+            pl.BlockSpec((v_tile, k), lambda i, pd, ps, pf: (ps[i], 0)),  # P src slice
+        ],
+        out_specs=pl.BlockSpec((v_tile, k), lambda i, pd, ps, pf: (pd[i], 0)),
+    )
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((n_dst * v_tile, k), out_dtype),
+        interpret=interpret,
+    )(packet_dst, packet_src, packet_first, x_local, y_local, val, p)

@@ -1,0 +1,139 @@
+"""Pallas TPU kernel: fused blocked attention (flash-attention style).
+
+The LM stack's prefill/train attention is the framework's compute hot-spot and
+— per the §Roofline tables — a large slice of the memory term comes from
+materializing [Sq, Skv] score tensors in HBM.  This kernel computes
+softmax(QKᵀ/√d + mask)·V with the online-softmax recurrence so scores never
+leave VMEM:
+
+  grid = (batch·heads, q_blocks, kv_blocks), kv innermost.
+  carry (VMEM scratch): m (running max), l (running sum), acc (output).
+  Supports causal masking and local windows (gemma2/gemma3/mixtral-SWA);
+  out-of-window kv blocks are skipped by the mask (a production version would
+  skip them in the index map — noted in EXPERIMENTS §Perf).
+
+HBM traffic: Q + K + V + O only — the [Sq,Skv] term drops entirely.
+Validated against ref.flash_attention_ref in interpret mode
+(tests/test_flash_attention.py), including GQA via kv-head broadcasting
+at the wrapper level.
+"""
+from __future__ import annotations
+
+import functools
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _fa_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref,
+               *, scale: float, causal: bool, window: int,
+               bq: int, bk: int, n_kv: int):
+    """One (bh, qi, ki) grid step."""
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0].astype(jnp.float32)              # [bq, d]
+    k = k_ref[0].astype(jnp.float32)              # [bk, d]
+    v = v_ref[0].astype(jnp.float32)              # [bk, d]
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale  # [bq,bk]
+    qpos = qi * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+    kpos = ki * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+    mask = jnp.ones((bq, bk), bool)
+    if causal:
+        mask &= qpos >= kpos
+    if window > 0:
+        mask &= qpos - kpos < window
+    s = jnp.where(mask, s, NEG_INF)
+
+    m_prev = m_ref[...]                           # [bq, 1]
+    m_cur = jnp.max(s, axis=1, keepdims=True)
+    m_new = jnp.maximum(m_prev, m_cur)
+    p = jnp.exp(s - m_new)                        # [bq, bk]
+    alpha = jnp.exp(m_prev - m_new)               # [bq, 1]
+    l_new = alpha * l_ref[...] + p.sum(axis=1, keepdims=True)
+    acc_ref[...] = acc_ref[...] * alpha + jnp.dot(
+        p, v, preferred_element_type=jnp.float32)
+    m_ref[...] = m_new
+    l_ref[...] = l_new
+
+    @pl.when(ki == n_kv - 1)
+    def _finish():
+        # rows with no valid kv (l==0) output 0
+        l = l_ref[...]
+        o_ref[0, ...] = jnp.where(
+            l > 0, acc_ref[...] / jnp.maximum(l, 1e-30), 0.0
+        ).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("causal", "window", "bq", "bk", "interpret"),
+)
+def flash_attention_pallas(
+    q: jax.Array,      # [BH, Sq, d]
+    k: jax.Array,      # [BH, Skv, d]
+    v: jax.Array,      # [BH, Skv, d]
+    *,
+    causal: bool = True,
+    window: int = 0,
+    bq: int = 128,
+    bk: int = 128,
+    interpret: bool = True,
+) -> jax.Array:
+    bh, sq, d = q.shape
+    skv = k.shape[1]
+    if sq % bq or skv % bk:
+        raise ValueError(f"seq ({sq},{skv}) not divisible by blocks ({bq},{bk})")
+    n_kv = skv // bk
+    scale = 1.0 / math.sqrt(d)
+    grid = (bh, sq // bq, n_kv)
+    kernel = functools.partial(
+        _fa_kernel, scale=scale, causal=causal, window=window,
+        bq=bq, bk=bk, n_kv=n_kv)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bq, d), lambda b, i, j: (b, i, 0)),
+            pl.BlockSpec((1, bk, d), lambda b, i, j: (b, j, 0)),
+            pl.BlockSpec((1, bk, d), lambda b, i, j: (b, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, d), lambda b, i, j: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((bh, sq, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, 1), jnp.float32),   # m
+            pltpu.VMEM((bq, 1), jnp.float32),   # l
+            pltpu.VMEM((bq, d), jnp.float32),   # acc
+        ],
+        interpret=interpret,
+    )(q, k, v)
+
+
+def flash_attention_gqa(q, k, v, *, causal=True, window=0, interpret=True,
+                        bq=128, bk=128):
+    """GQA wrapper: q [B,Sq,H,hd], k/v [B,Skv,KV,hd] → [B,Sq,H,hd]."""
+    b, sq, h, hd = q.shape
+    kvh = k.shape[2]
+    g = h // kvh
+    kb = jnp.repeat(k, g, axis=2)
+    vb = jnp.repeat(v, g, axis=2)
+    qf = q.transpose(0, 2, 1, 3).reshape(b * h, sq, hd)
+    kf = kb.transpose(0, 2, 1, 3).reshape(b * h, k.shape[1], hd)
+    vf = vb.transpose(0, 2, 1, 3).reshape(b * h, v.shape[1], hd)
+    o = flash_attention_pallas(qf, kf, vf, causal=causal, window=window,
+                               bq=bq, bk=bk, interpret=interpret)
+    return o.reshape(b, h, sq, hd).transpose(0, 2, 1, 3)

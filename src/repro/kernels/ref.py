@@ -1,0 +1,52 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose targets)."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.fixed_point import QFormat
+
+
+def coo_spmv_ref(x, y, val, p, num_vertices: int) -> jax.Array:
+    """Dense-semantics oracle for the streaming SpMM (float path)."""
+    contrib = val[:, None] * p[y]
+    return jax.ops.segment_sum(contrib, x, num_segments=num_vertices)
+
+
+def coo_spmv_fixed_ref(x, y, val_raw, p_raw, num_vertices: int, fmt: QFormat) -> jax.Array:
+    """Bit-exact fixed-point oracle (truncating multiply, exact raw add)."""
+    prod = fmt.mul(val_raw[:, None], p_raw[y])
+    acc = jax.ops.segment_sum(prod.astype(jnp.int32), x, num_segments=num_vertices)
+    return acc.astype(jnp.uint32)
+
+
+def quantized_matmul_ref(a, w_q, scale) -> jax.Array:
+    """Oracle for fixed_matmul: (a @ w_q) * scale, accumulated in f32."""
+    acc = jnp.dot(a.astype(jnp.float32), w_q.astype(jnp.float32),
+                  preferred_element_type=jnp.float32)
+    return acc * scale[None, :].astype(jnp.float32)
+
+
+def flash_attention_ref(q, k, v, causal: bool = True, window: int = 0) -> jax.Array:
+    """Oracle for the fused attention kernel: q/k/v [BH, S, d]."""
+    import math
+
+    d = q.shape[-1]
+    s = jnp.einsum("bqd,bkd->bqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) / math.sqrt(d)
+    sq, skv = q.shape[1], k.shape[1]
+    qpos = jnp.arange(sq)[:, None]
+    kpos = jnp.arange(skv)[None, :]
+    mask = jnp.ones((sq, skv), bool)
+    if causal:
+        mask &= qpos >= kpos
+    if window > 0:
+        mask &= qpos - kpos < window
+    s = jnp.where(mask[None], s, -1e30)
+    w = jax.nn.softmax(s, axis=-1)
+    # fully-masked rows → 0 output (kernel convention)
+    any_valid = mask.any(axis=1)[None, :, None]
+    out = jnp.einsum("bqk,bkd->bqd", w, v.astype(jnp.float32))
+    return jnp.where(any_valid, out, 0.0).astype(q.dtype)

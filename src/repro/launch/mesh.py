@@ -1,0 +1,16 @@
+"""Production mesh definitions (per run-book: function, not module constant)."""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16×16 = 256 chips per pod; 2 pods = 512 chips multi-pod."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_debug_mesh(data: int = 2, model: int = 2):
+    """Small mesh for CI-scale distributed tests (requires ≥ data·model devices)."""
+    return jax.make_mesh((data, model), ("data", "model"))

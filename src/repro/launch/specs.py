@@ -1,0 +1,64 @@
+"""ShapeDtypeStruct stand-ins for every (arch × shape) dry-run cell.
+
+No device allocation: params come from jax.eval_shape(init_params), the decode
+cache from jax.eval_shape(init_cache), and the batch is built directly.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.models.transformer import build_model
+from repro.training.optimizer import AdamState
+from repro.training.train_loop import TrainState
+
+SDS = jax.ShapeDtypeStruct
+
+
+def batch_specs(cfg: ModelConfig, shape: ShapeConfig) -> Dict[str, Any]:
+    """Training/prefill batch stand-ins (modality frontends are stubs:
+    precomputed frame/patch embeddings per the assignment)."""
+    b, s = shape.global_batch, shape.seq_len
+    specs: Dict[str, Any] = {}
+    text_s = s - (cfg.num_patches or 0)
+    specs["tokens"] = SDS((b, text_s), jnp.int32)
+    if shape.kind == "train":
+        specs["targets"] = SDS((b, s if not cfg.num_patches else text_s), jnp.int32)
+    if cfg.enc_len:
+        specs["frames"] = SDS((b, cfg.enc_len, cfg.d_model), jnp.float32)
+    if cfg.num_patches:
+        specs["patches"] = SDS((b, cfg.num_patches, cfg.d_model), jnp.float32)
+    return specs
+
+
+def params_specs(api) -> Any:
+    return jax.eval_shape(lambda k: api.init_params(k), jax.random.PRNGKey(0))
+
+
+def cache_specs(api, batch: int, max_len: int) -> Any:
+    return jax.eval_shape(
+        functools.partial(api.init_cache, batch, max_len))
+
+
+def train_state_specs(params_s) -> TrainState:
+    zeros = jax.tree.map(lambda l: SDS(l.shape, l.dtype), params_s)
+    return TrainState(
+        params=zeros,
+        opt=AdamState(step=SDS((), jnp.int32),
+                      mu=jax.tree.map(lambda l: SDS(l.shape, l.dtype), params_s),
+                      nu=jax.tree.map(lambda l: SDS(l.shape, l.dtype), params_s)),
+        residual=None,
+    )
+
+
+def decode_specs(cfg: ModelConfig, shape: ShapeConfig, api):
+    """(token, pos, cache) stand-ins for one decode step with a seq_len cache."""
+    b = shape.global_batch
+    token = SDS((b, 1), jnp.int32)
+    pos = SDS((), jnp.int32)
+    cache = cache_specs(api, b, shape.seq_len)
+    return token, pos, cache

@@ -1,0 +1,3 @@
+from repro.models.transformer import ModelApi, build_model, init_params
+
+__all__ = ["ModelApi", "build_model", "init_params"]

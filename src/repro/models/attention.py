@@ -1,0 +1,262 @@
+"""Attention: GQA/MQA, local (sliding-window) and global, softcap, qk-norm,
+query-chunked memory-bounded computation, and cached decode.
+
+Window sizes are STATIC per call (the segment machinery guarantees it), so
+local layers genuinely slice K/V to [W + qc] — sub-quadratic compute, not just
+masking.  Query chunking bounds the scores transient to [B, KV, G, qc, Skv]
+(a scan, not a materialized [Sq, Skv] tensor) — the XLA-level equivalent of a
+flash-attention outer loop.
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.common import dense_init, init_norm, rmsnorm, rope, softcap, split_keys
+
+Array = jax.Array
+
+
+def init_attention(key, cfg: ModelConfig) -> Dict:
+    d, h, kv, hd = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    ks = split_keys(key, 4)
+    p = {
+        "wq": dense_init(ks[0], (d, h * hd), d),
+        "wk": dense_init(ks[1], (d, kv * hd), d),
+        "wv": dense_init(ks[2], (d, kv * hd), d),
+        "wo": dense_init(ks[3], (h * hd, d), h * hd),
+    }
+    if cfg.use_qk_norm:
+        p["q_norm"] = jnp.ones((hd,), jnp.float32)
+        p["k_norm"] = jnp.ones((hd,), jnp.float32)
+    return p
+
+
+def _project_qkv(x, p, cfg: ModelConfig, positions):
+    """x [B,S,D] → q [B,S,H,hd], k/v [B,S,KV,hd] with rope/qk-norm applied."""
+    b, s, _ = x.shape
+    h, kv, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    q = (x @ p["wq"].astype(x.dtype)).reshape(b, s, h, hd)
+    k = (x @ p["wk"].astype(x.dtype)).reshape(b, s, kv, hd)
+    v = (x @ p["wv"].astype(x.dtype)).reshape(b, s, kv, hd)
+    if cfg.use_qk_norm:
+        q = rmsnorm(q, p["q_norm"])
+        k = rmsnorm(k, p["k_norm"])
+    if not cfg.learned_pos:
+        q = rope(q, positions, cfg.rope_theta)
+        k = rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def _attend(q, k, v, qpos, kpos, cfg: ModelConfig, causal: bool) -> Array:
+    """Masked GQA attention.  q [B,qc,H,hd]; k/v [B,Skv,KV,hd];
+    qpos [qc], kpos [Skv] global positions (mask = causal ∧ window)."""
+    b, qc, h, hd = q.shape
+    kvh = k.shape[2]
+    g = h // kvh
+    qg = q.reshape(b, qc, kvh, g, hd)
+    scores = jnp.einsum("bqkgd,bskd->bkgqs", qg, k).astype(jnp.float32)
+    scores = scores / math.sqrt(hd)
+    scores = softcap(scores, cfg.attn_softcap)
+    mask = jnp.ones((qc, k.shape[1]), bool)
+    if causal:
+        mask &= qpos[:, None] >= kpos[None, :]
+    mask &= kpos[None, :] >= 0  # padding slots in sliced windows carry kpos=-1
+    scores = jnp.where(mask[None, None, None], scores, -1e30)
+    w = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+    out = jnp.einsum("bkgqs,bskd->bqkgd", w, v)
+    return out.reshape(b, qc, h, hd)
+
+
+def attention(
+    x: Array,
+    p: Dict,
+    cfg: ModelConfig,
+    *,
+    window: int,                 # STATIC: 0 = full, >0 = local window
+    causal: bool = True,
+    kv_override: Optional[Tuple[Array, Array]] = None,  # cross-attention
+    chunk: int = 512,
+    return_kv: bool = False,
+) -> Array:
+    """Training/prefill attention over a full sequence.  x [B,S,D] → [B,S,D]."""
+    b, s, d = x.shape
+    positions = jnp.arange(s)[None, :]
+    q, k, v = _project_qkv(x, p, cfg, positions)
+    if kv_override is not None:
+        k, v = kv_override
+    kpos_full = jnp.arange(k.shape[1])
+    qc = min(chunk, s)
+    while s % qc:       # largest divisor of S ≤ chunk (e.g. 1500 → 500)
+        qc -= 1
+    n_chunks = s // qc
+    if n_chunks <= 1:
+        if window and window < s and kv_override is None:
+            out = _attend_window(q, k, v, 0, cfg, causal, window)
+        else:
+            out = _attend(q, k, v, jnp.arange(s), kpos_full, cfg, causal)
+    else:
+        qs = q.reshape(b, n_chunks, qc, cfg.num_heads, cfg.head_dim)
+
+        def chunk_body(carry, i):
+            qi = qs[:, i]
+            start = i * qc
+            if window and window < s and kv_override is None:
+                out_i = _attend_window(qi, k, v, start, cfg, causal, window)
+            else:
+                out_i = _attend(qi, k, v, start + jnp.arange(qc), kpos_full, cfg, causal)
+            return carry, out_i
+
+        _, outs = jax.lax.scan(chunk_body, None, jnp.arange(n_chunks))
+        # outs [n_chunks, B, qc, H, hd] → [B, S, H, hd]
+        out = outs.transpose(1, 0, 2, 3, 4).reshape(b, s, cfg.num_heads, cfg.head_dim)
+    y = out.reshape(b, s, cfg.num_heads * cfg.head_dim) @ p["wo"].astype(x.dtype)
+    if return_kv:
+        return y, k, v
+    return y
+
+
+def _attend_window(q_chunk, k, v, chunk_start, cfg: ModelConfig, causal: bool, window: int):
+    """Local attention: slice K/V to [chunk_start-window, chunk_start+qc) —
+    static size window+qc, true sub-quadratic compute for local layers."""
+    b, qc, h, hd = q_chunk.shape
+    s = k.shape[1]
+    span = min(window + qc, s)
+    start = jnp.clip(chunk_start - window, 0, s - span)
+    ks = jax.lax.dynamic_slice_in_dim(k, start, span, axis=1)
+    vs = jax.lax.dynamic_slice_in_dim(v, start, span, axis=1)
+    qpos = chunk_start + jnp.arange(qc)
+    kpos = start + jnp.arange(span)
+    # window mask: attend only to the last `window` positions before each query
+    out = _attend_masked_window(q_chunk, ks, vs, qpos, kpos, cfg, causal, window)
+    return out
+
+
+def _attend_masked_window(q, k, v, qpos, kpos, cfg, causal, window):
+    b, qc, h, hd = q.shape
+    kvh = k.shape[2]
+    g = h // kvh
+    qg = q.reshape(b, qc, kvh, g, hd)
+    scores = jnp.einsum("bqkgd,bskd->bkgqs", qg, k).astype(jnp.float32) / math.sqrt(hd)
+    scores = softcap(scores, cfg.attn_softcap)
+    mask = (qpos[:, None] >= kpos[None, :]) if causal else jnp.ones((qc, k.shape[1]), bool)
+    mask &= qpos[:, None] - kpos[None, :] < window
+    scores = jnp.where(mask[None, None, None], scores, -1e30)
+    w = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+    return jnp.einsum("bkgqs,bskd->bqkgd", w, v).reshape(b, qc, h, hd)
+
+
+# ---------------------------------------------------------------------------
+# cached decode
+# ---------------------------------------------------------------------------
+def prefill_kv(x, p, cfg: ModelConfig) -> Tuple[Array, Array]:
+    """Project K/V for the whole prompt (cache fill)."""
+    positions = jnp.arange(x.shape[1])[None, :]
+    _, k, v = _project_qkv(x, p, cfg, positions)
+    return k, v
+
+
+def decode_attention(
+    x: Array,            # [B, 1, D] current token hidden
+    p: Dict,
+    cfg: ModelConfig,
+    cache_k: Array,      # [B, Smax, KV, hd]
+    cache_v: Array,
+    pos: Array,          # scalar int32: index of the current token
+    *,
+    window: int,         # STATIC
+) -> Tuple[Array, Array, Array]:
+    """One-token attention against the cache; returns (out, new_k, new_v)."""
+    b = x.shape[0]
+    positions = jnp.full((b, 1), pos, jnp.int32)
+    q, k_new, v_new = _project_qkv(x, p, cfg, positions)
+    cache_k = jax.lax.dynamic_update_slice_in_dim(cache_k, k_new.astype(cache_k.dtype), pos, axis=1)
+    cache_v = jax.lax.dynamic_update_slice_in_dim(cache_v, v_new.astype(cache_v.dtype), pos, axis=1)
+    smax = cache_k.shape[1]
+    kpos = jnp.arange(smax)
+    valid = kpos <= pos
+    if window:
+        valid &= kpos > pos - window
+    kvh, hd, h = cfg.num_kv_heads, cfg.head_dim, cfg.num_heads
+    g = h // kvh
+    qg = q.reshape(b, 1, kvh, g, hd)
+    scores = jnp.einsum("bqkgd,bskd->bkgqs", qg, cache_k.astype(q.dtype)).astype(jnp.float32)
+    scores = softcap(scores / math.sqrt(hd), cfg.attn_softcap)
+    scores = jnp.where(valid[None, None, None, None, :], scores, -1e30)
+    w = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+    out = jnp.einsum("bkgqs,bskd->bqkgd", w, cache_v.astype(q.dtype)).reshape(b, 1, h * hd)
+    return out @ p["wo"].astype(x.dtype), cache_k, cache_v
+
+
+def decode_attention_windowed(
+    x: Array,
+    p: Dict,
+    cfg: ModelConfig,
+    cache_k: Array,      # [B, W, KV, hd] rolling buffer (slot = position % W)
+    cache_v: Array,
+    pos: Array,
+    *,
+    window: int,         # STATIC == cache length
+) -> Tuple[Array, Array, Array]:
+    """Local-attention decode against a rolling window buffer (§Perf
+    it_windowed_kv made real): HBM cost is O(window), not O(max_len)."""
+    b = x.shape[0]
+    w = cache_k.shape[1]
+    positions = jnp.full((b, 1), pos, jnp.int32)
+    q, k_new, v_new = _project_qkv(x, p, cfg, positions)
+    slot = pos % w
+    cache_k = jax.lax.dynamic_update_slice_in_dim(
+        cache_k, k_new.astype(cache_k.dtype), slot, axis=1)
+    cache_v = jax.lax.dynamic_update_slice_in_dim(
+        cache_v, v_new.astype(cache_v.dtype), slot, axis=1)
+    # true position held by each slot j: largest p' ≤ pos with p' % w == j
+    j = jnp.arange(w)
+    kpos = pos - ((pos - j) % w)
+    valid = (kpos >= 0) & (kpos > pos - window)
+    kvh, hd, h = cfg.num_kv_heads, cfg.head_dim, cfg.num_heads
+    g = h // kvh
+    qg = q.reshape(b, 1, kvh, g, hd)
+    scores = jnp.einsum("bqkgd,bskd->bkgqs", qg,
+                        cache_k.astype(q.dtype)).astype(jnp.float32)
+    scores = softcap(scores / math.sqrt(hd), cfg.attn_softcap)
+    scores = jnp.where(valid[None, None, None, None, :], scores, -1e30)
+    wgt = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+    out = jnp.einsum("bkgqs,bskd->bqkgd", wgt,
+                     cache_v.astype(q.dtype)).reshape(b, 1, h * hd)
+    return out @ p["wo"].astype(x.dtype), cache_k, cache_v
+
+
+def fill_windowed_cache(cache_k, cache_v, k, v):
+    """Prefill a rolling buffer from full-prompt K/V [B,Sp,KV,hd]: keep the
+    last W positions at slot = position % W."""
+    w = cache_k.shape[1]
+    sp = k.shape[1]
+    if sp <= w:
+        ck = jax.lax.dynamic_update_slice_in_dim(cache_k, k.astype(cache_k.dtype),
+                                                 0, axis=1)
+        cv = jax.lax.dynamic_update_slice_in_dim(cache_v, v.astype(cache_v.dtype),
+                                                 0, axis=1)
+        return ck, cv
+    positions = sp - w + jnp.arange(w)
+    slots = positions % w
+    ck = cache_k.at[:, slots].set(k[:, positions].astype(cache_k.dtype))
+    cv = cache_v.at[:, slots].set(v[:, positions].astype(cache_v.dtype))
+    return ck, cv
+
+
+def cross_attention_cached(x, p, cfg: ModelConfig, cross_k, cross_v) -> Array:
+    """Decoder cross-attention against precomputed encoder K/V (whisper)."""
+    b, s, _ = x.shape
+    h, kvh, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    q = (x @ p["wq"].astype(x.dtype)).reshape(b, s, h, hd)
+    g = h // kvh
+    qg = q.reshape(b, s, kvh, g, hd)
+    scores = jnp.einsum("bqkgd,bskd->bkgqs", qg, cross_k.astype(x.dtype)).astype(jnp.float32)
+    scores = scores / math.sqrt(hd)
+    w = jax.nn.softmax(scores, axis=-1).astype(x.dtype)
+    out = jnp.einsum("bkgqs,bskd->bqkgd", w, cross_v.astype(x.dtype)).reshape(b, s, h * hd)
+    return out @ p["wo"].astype(x.dtype)

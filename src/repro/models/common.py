@@ -1,0 +1,123 @@
+"""Shared building blocks for every architecture: norms, RoPE, activations,
+initialization, and pattern→segment compression for scanned layers."""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Array = jax.Array
+PyTree = Any
+
+
+# ---------------------------------------------------------------------------
+# normalization
+# ---------------------------------------------------------------------------
+def rmsnorm(x: Array, w: Array, eps: float = 1e-6) -> Array:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    x = x * jax.lax.rsqrt(jnp.mean(x * x, axis=-1, keepdims=True) + eps)
+    return (x * w.astype(jnp.float32)).astype(dt)
+
+
+def layernorm(x: Array, w: Array, b: Array, eps: float = 1e-5) -> Array:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean((x - mu) ** 2, axis=-1, keepdims=True)
+    y = (x - mu) * jax.lax.rsqrt(var + eps)
+    return (y * w.astype(jnp.float32) + b.astype(jnp.float32)).astype(dt)
+
+
+def norm(x: Array, p: Dict[str, Array], kind: str) -> Array:
+    if kind == "rmsnorm":
+        return rmsnorm(x, p["w"])
+    return layernorm(x, p["w"], p["b"])
+
+
+def init_norm(d: int, kind: str) -> Dict[str, Array]:
+    if kind == "rmsnorm":
+        return {"w": jnp.ones((d,), jnp.float32)}
+    return {"w": jnp.ones((d,), jnp.float32), "b": jnp.zeros((d,), jnp.float32)}
+
+
+# ---------------------------------------------------------------------------
+# activations
+# ---------------------------------------------------------------------------
+def act_fn(x: Array, kind: str) -> Array:
+    if kind == "silu":
+        return jax.nn.silu(x)
+    return jax.nn.gelu(x, approximate=True)
+
+
+def softcap(x: Array, cap: float) -> Array:
+    """gemma2 logit soft-capping: cap·tanh(x/cap)."""
+    if cap <= 0.0:
+        return x
+    return jnp.tanh(x / cap) * cap
+
+
+# ---------------------------------------------------------------------------
+# rotary embeddings
+# ---------------------------------------------------------------------------
+def rope(x: Array, positions: Array, theta: float) -> Array:
+    """x: [..., S, H, hd]; positions: broadcastable to [..., S]."""
+    hd = x.shape[-1]
+    half = hd // 2
+    freqs = jnp.exp(
+        -math.log(theta) * jnp.arange(0, half, dtype=jnp.float32) / half
+    )  # [half]
+    angles = positions[..., None].astype(jnp.float32) * freqs  # [..., S, half]
+    cos = jnp.cos(angles)[..., None, :]  # [..., S, 1, half]
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    dt = x.dtype
+    x1f, x2f = x1.astype(jnp.float32), x2.astype(jnp.float32)
+    return jnp.concatenate(
+        [x1f * cos - x2f * sin, x2f * cos + x1f * sin], axis=-1
+    ).astype(dt)
+
+
+# ---------------------------------------------------------------------------
+# initialization helpers
+# ---------------------------------------------------------------------------
+def dense_init(key, shape, in_dim) -> Array:
+    return (jax.random.normal(key, shape, jnp.float32) / math.sqrt(in_dim))
+
+
+def split_keys(key, n: int):
+    return list(jax.random.split(key, n))
+
+
+# ---------------------------------------------------------------------------
+# layer-pattern → (group, repeats) segments (DESIGN.md §7)
+# ---------------------------------------------------------------------------
+def find_segments(pattern: Tuple[int, ...], max_period: int = 8) -> List[Tuple[Tuple[int, ...], int]]:
+    """Greedy compression of the per-layer pattern into periodic segments so
+    that structural variation is STATIC inside each scanned body.
+
+    gemma2  (4096,0)*23              → [((4096,0), 23)]
+    gemma3  ((1024,)*5+(0,))*5+(1024,)*4 → [((1024,)*5+(0,), 5), ((1024,), 4)]
+    uniform (0,)*L                   → [((0,), L)]
+    """
+    segs: List[Tuple[Tuple[int, ...], int]] = []
+    i, n = 0, len(pattern)
+    while i < n:
+        best_p, best_r = 1, 1
+        for p in range(1, min(max_period, n - i) + 1):
+            group = pattern[i: i + p]
+            r = 1
+            while pattern[i + r * p: i + (r + 1) * p] == group:
+                r += 1
+            if p * r > best_p * best_r:
+                best_p, best_r = p, r
+        segs.append((pattern[i: i + best_p], best_r))
+        i += best_p * best_r
+    return segs
+
+
+def tree_stack(trees: List[PyTree]) -> PyTree:
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *trees)

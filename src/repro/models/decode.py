@@ -1,0 +1,331 @@
+"""Cached prefill / decode paths for every architecture family.
+
+Cache layout (pytree):
+  attention archs : [{"k": [reps, g, B, Smax, KV, hd], "v": ...} per segment]
+  + whisper       : each segment dict also holds cross "ck"/"cv" [reps,g,B,enc,KV,hd]
+  ssm archs       : {"conv": [L, B, K-1, conv_dim], "ssd": [L, B, nh, hd, state]}
+  zamba2 (hybrid) : {"mamba": <ssm cache>, "shared": {"k": [apps, B, Smax, KV, hd], ...}}
+
+``prefill(params, batch, cache)`` fills the cache for the prompt and returns the
+last-position logits; ``decode_step(params, token, pos, cache)`` advances one
+token.  Both scan over layer segments exactly like the training forward.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import MAMBA, ModelConfig
+from repro.models import attention as attn_mod
+from repro.models import moe as moe_mod
+from repro.models import ssm as ssm_mod
+from repro.models.common import find_segments, norm
+
+Array = jax.Array
+
+
+def _n_shared_apps(cfg: ModelConfig) -> int:
+    return -(-cfg.num_layers // cfg.shared_attn_every) if cfg.shared_attn_every else 0
+
+
+def build_decode_fns(cfg: ModelConfig, embed_inputs, run_encoder, logits_fn):
+    segments = find_segments(cfg.layer_pattern)
+    is_encdec = cfg.enc_layers > 0
+    is_ssm = all(w == MAMBA for w in cfg.layer_pattern)
+
+    # ------------------------------------------------------------------
+    def init_cache(batch: int, max_len: int, dtype=None, window_cache: bool = False):
+        """window_cache=True sizes local-attention layers' KV as rolling
+        buffers of their window (§Perf it_windowed_kv, made real) — per-layer
+        ``k_<j>`` keys since lengths differ within a scanned group."""
+        dtype = dtype or cfg.act_dtype
+        kv, hd = cfg.num_kv_heads, cfg.head_dim
+        if is_ssm:
+            mc = ssm_mod.mamba_init_cache(cfg, batch)
+            cache: Dict[str, Any] = {"mamba": jax.tree.map(
+                lambda a: jnp.zeros((cfg.num_layers,) + a.shape, a.dtype), mc)}
+            if cfg.shared_attn_every:
+                apps = _n_shared_apps(cfg)
+                cache["shared"] = {
+                    "k": jnp.zeros((apps, batch, max_len, kv, hd), dtype),
+                    "v": jnp.zeros((apps, batch, max_len, kv, hd), dtype),
+                }
+            return cache
+        segs = []
+        for group, reps in segments:
+            g = len(group)
+            if window_cache:
+                seg = {}
+                for j, w in enumerate(group):
+                    sj = min(w, max_len) if w else max_len
+                    seg[f"k_{j}"] = jnp.zeros((reps, batch, sj, kv, hd), dtype)
+                    seg[f"v_{j}"] = jnp.zeros((reps, batch, sj, kv, hd), dtype)
+            else:
+                seg = {
+                    "k": jnp.zeros((reps, g, batch, max_len, kv, hd), dtype),
+                    "v": jnp.zeros((reps, g, batch, max_len, kv, hd), dtype),
+                }
+            if is_encdec:
+                seg["ck"] = jnp.zeros((reps, g, batch, cfg.enc_len, kv, hd), dtype)
+                seg["cv"] = jnp.zeros((reps, g, batch, cfg.enc_len, kv, hd), dtype)
+            segs.append(seg)
+        return segs
+
+    # ------------------------------------------------------------------
+    # prefill
+    # ------------------------------------------------------------------
+    def _prefill_attn_layer(h, lp, window, enc_out, ck_slot, cv_slot):
+        a, k, v = attn_mod.attention(
+            norm(h, lp["ln1"], cfg.norm), lp["attn"], cfg,
+            window=window, causal=True, return_kv=True)
+        if cfg.post_norms:
+            a = norm(a, lp["post_ln1"], cfg.norm)
+        h = h + a
+        new_cross = None
+        if enc_out is not None and "cross" in lp:
+            b, se, _ = enc_out.shape
+            ek = (enc_out @ lp["cross"]["wk"].astype(h.dtype)).reshape(
+                b, se, cfg.num_kv_heads, cfg.head_dim)
+            ev = (enc_out @ lp["cross"]["wv"].astype(h.dtype)).reshape(
+                b, se, cfg.num_kv_heads, cfg.head_dim)
+            c = attn_mod.cross_attention_cached(
+                norm(h, lp["ln_cross"], cfg.norm), lp["cross"], cfg, ek, ev)
+            h = h + c
+            new_cross = (ek.astype(ck_slot.dtype), ev.astype(cv_slot.dtype))
+        mi = norm(h, lp["ln2"], cfg.norm)
+        m = moe_mod.moe_ffn(mi, lp["moe"], cfg) if cfg.num_experts else \
+            moe_mod.mlp(mi, lp["mlp"], cfg)
+        if cfg.post_norms:
+            m = norm(m, lp["post_ln2"], cfg.norm)
+        return h + m, k, v, new_cross
+
+    def prefill(params, batch, cache):
+        h = embed_inputs(params, batch, cfg)
+        enc_out = run_encoder(params, batch["frames"], cfg) if is_encdec else None
+        sp = h.shape[1]
+        if is_ssm:
+            h, cache = _prefill_ssm(params, h, cache)
+        else:
+            new_segs = []
+            for seg_params, seg_cache, (group, reps) in zip(
+                    params["segments"], cache, segments):
+                windowed_layout = "k_0" in seg_cache
+
+                def body(carry, xs, group=group, windowed_layout=windowed_layout):
+                    hh = carry
+                    lps, sc = xs
+                    upd = {k2: sc[k2] for k2 in sc}
+                    for j, w in enumerate(group):
+                        lp = jax.tree.map(lambda a: a[j], lps)
+                        ckj = sc["ck"][j] if is_encdec else None
+                        cvj = sc["cv"][j] if is_encdec else None
+                        hh, k, v, cross = _prefill_attn_layer(hh, lp, w, enc_out, ckj, cvj)
+                        if windowed_layout:
+                            kk, vv = attn_mod.fill_windowed_cache(
+                                sc[f"k_{j}"], sc[f"v_{j}"], k, v)
+                            upd[f"k_{j}"] = kk
+                            upd[f"v_{j}"] = vv
+                        else:
+                            kk = jax.lax.dynamic_update_slice_in_dim(
+                                sc["k"][j], k.astype(sc["k"].dtype), 0, axis=1)
+                            vv = jax.lax.dynamic_update_slice_in_dim(
+                                sc["v"][j], v.astype(sc["v"].dtype), 0, axis=1)
+                            upd["k"] = upd["k"].at[j].set(kk)
+                            upd["v"] = upd["v"].at[j].set(vv)
+                        if cross is not None:
+                            upd["ck"] = upd["ck"].at[j].set(cross[0])
+                            upd["cv"] = upd["cv"].at[j].set(cross[1])
+                    return hh, upd
+
+                h, new_cache = jax.lax.scan(body, h, (seg_params, seg_cache))
+                new_segs.append(new_cache)
+            cache = new_segs
+        h = norm(h, params["final_norm"], cfg.norm)
+        last = h[:, -1:, :]
+        return logits_fn(params, last, cfg)[:, 0], cache
+
+    def _prefill_ssm(params, h, cache):
+        seg_params = params["segments"][0]
+        mamba_cache = cache["mamba"]
+        L, every = cfg.num_layers, cfg.shared_attn_every
+
+        def body(carry, xs):
+            hh = carry
+            lps, mc = xs
+            lp = jax.tree.map(lambda a: a[0], lps)
+            xin = norm(hh, lp["ln1"], cfg.norm)
+            y, st = _mamba_layer_with_state(xin, lp["mamba"])
+            return hh + y, st
+
+        if every:
+            apps = _n_shared_apps(cfg)
+            shared = cache["shared"]
+            sk, sv = shared["k"], shared["v"]
+            new_states = []
+            for gi, start in enumerate(range(0, L, every)):
+                hin = norm(h, params["shared_attn"]["ln1"], cfg.norm)
+                a, k, v = attn_mod.attention(hin, params["shared_attn"]["attn"],
+                                             cfg, window=0, return_kv=True)
+                h = h + a
+                h = h + moe_mod.mlp(norm(h, params["shared_attn"]["ln2"], cfg.norm),
+                                    params["shared_attn"]["mlp"], cfg)
+                sk = sk.at[gi, :, : k.shape[1]].set(k.astype(sk.dtype))
+                sv = sv.at[gi, :, : v.shape[1]].set(v.astype(sv.dtype))
+                stop = min(start + every, L)
+                chunk = jax.tree.map(lambda a: a[start:stop], seg_params)
+                mchunk = jax.tree.map(lambda a: a[start:stop], mamba_cache)
+                h, states = jax.lax.scan(body, h, (chunk, mchunk))
+                new_states.append(states)
+            mamba_new = jax.tree.map(lambda *xs: jnp.concatenate(xs), *new_states)
+            return h, {"mamba": mamba_new, "shared": {"k": sk, "v": sv}}
+        h, states = jax.lax.scan(body, h, (seg_params, mamba_cache))
+        return h, {"mamba": states}
+
+    def _mamba_layer_with_state(xin, mp):
+        """mamba_layer variant that also returns the decode cache entry."""
+        b, s, d = xin.shape
+        di, st, nh, hd = cfg.ssm_d_inner, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_head_dim
+        xz = xin @ mp["w_in"].astype(xin.dtype)
+        z, xi, B, C, dt = ssm_mod._split_proj(xz, cfg)
+        conv_in = jnp.concatenate([xi, B, C], axis=-1)
+        conv_out = jax.nn.silu(ssm_mod._causal_conv(
+            conv_in, mp["conv_w"].astype(xin.dtype), mp["conv_b"].astype(xin.dtype)))
+        xi2, B2, C2 = jnp.split(conv_out, [di, di + ssm_mod.NGROUPS * st], axis=-1)
+        dtp = jax.nn.softplus(dt.astype(jnp.float32) + mp["dt_bias"][None, None, :])
+        A = -jnp.exp(mp["A_log"].astype(jnp.float32))
+        ck = min(256, s)
+        y, final = ssm_mod.ssd_chunked(
+            xi2.reshape(b, s, nh, hd).astype(jnp.float32), dtp, A,
+            B2.reshape(b, s, ssm_mod.NGROUPS, st).astype(jnp.float32),
+            C2.reshape(b, s, ssm_mod.NGROUPS, st).astype(jnp.float32), ck)
+        y = y + xi2.reshape(b, s, nh, hd).astype(jnp.float32) * mp["D"][None, None, :, None]
+        y = y.reshape(b, s, di).astype(xin.dtype)
+        y = ssm_mod.rmsnorm(y * jax.nn.silu(z), mp["norm_w"])
+        out = y @ mp["w_out"].astype(xin.dtype)
+        # conv tail: last (K-1) conv inputs
+        tail = conv_in[:, -(cfg.ssm_conv - 1):, :].astype(jnp.float32)
+        return out, {"conv": tail, "ssd": final}
+
+    # ------------------------------------------------------------------
+    # decode
+    # ------------------------------------------------------------------
+    def _decode_attn_layer(h, lp, window, pos, k_c, v_c, ck=None, cv=None):
+        a, k_c, v_c = attn_mod.decode_attention(
+            norm(h, lp["ln1"], cfg.norm), lp["attn"], cfg, k_c, v_c, pos,
+            window=window)
+        if cfg.post_norms:
+            a = norm(a, lp["post_ln1"], cfg.norm)
+        h = h + a
+        if ck is not None and "cross" in lp:
+            c = attn_mod.cross_attention_cached(
+                norm(h, lp["ln_cross"], cfg.norm), lp["cross"], cfg, ck, cv)
+            h = h + c
+        mi = norm(h, lp["ln2"], cfg.norm)
+        m = moe_mod.moe_ffn(mi, lp["moe"], cfg) if cfg.num_experts else \
+            moe_mod.mlp(mi, lp["mlp"], cfg)
+        if cfg.post_norms:
+            m = norm(m, lp["post_ln2"], cfg.norm)
+        return h + m, k_c, v_c
+
+    def _decode_windowed_layer(h, lp, window, pos, k_c, v_c):
+        a, k_c, v_c = attn_mod.decode_attention_windowed(
+            norm(h, lp["ln1"], cfg.norm), lp["attn"], cfg, k_c, v_c, pos,
+            window=window)
+        if cfg.post_norms:
+            a = norm(a, lp["post_ln1"], cfg.norm)
+        h = h + a
+        mi = norm(h, lp["ln2"], cfg.norm)
+        m = moe_mod.moe_ffn(mi, lp["moe"], cfg) if cfg.num_experts else \
+            moe_mod.mlp(mi, lp["mlp"], cfg)
+        if cfg.post_norms:
+            m = norm(m, lp["post_ln2"], cfg.norm)
+        return h + m, k_c, v_c
+
+    def decode_step(params, token, pos, cache):
+        """token [B,1] int32, pos scalar int32 → (logits [B,Vp], cache)."""
+        h = params["embed"].astype(cfg.act_dtype)[token]
+        if cfg.embed_scale:
+            h = h * jnp.asarray(math.sqrt(cfg.d_model), h.dtype)
+        if cfg.learned_pos:
+            h = h + jax.lax.dynamic_slice_in_dim(
+                params["pos_embed"], pos, 1, axis=0)[None].astype(h.dtype)
+        if is_ssm:
+            h, cache = _decode_ssm(params, h, pos, cache)
+        else:
+            new_segs = []
+            for seg_params, seg_cache, (group, reps) in zip(
+                    params["segments"], cache, segments):
+                windowed_layout = "k_0" in seg_cache
+
+                def body(carry, xs, group=group, windowed_layout=windowed_layout):
+                    hh = carry
+                    lps, sc = xs
+                    upd = dict(sc)
+                    for j, w in enumerate(group):
+                        lp = jax.tree.map(lambda a: a[j], lps)
+                        ckj = sc["ck"][j] if is_encdec else None
+                        cvj = sc["cv"][j] if is_encdec else None
+                        if windowed_layout:
+                            kc, vc = sc[f"k_{j}"], sc[f"v_{j}"]
+                            if w and kc.shape[1] <= w:  # rolling window buffer
+                                hh, kk, vv = _decode_windowed_layer(
+                                    hh, lp, w, pos, kc, vc)
+                            else:
+                                hh, kk, vv = _decode_attn_layer(
+                                    hh, lp, w, pos, kc, vc, ckj, cvj)
+                            upd[f"k_{j}"] = kk
+                            upd[f"v_{j}"] = vv
+                        else:
+                            hh, kk, vv = _decode_attn_layer(
+                                hh, lp, w, pos, sc["k"][j], sc["v"][j], ckj, cvj)
+                            upd["k"] = upd["k"].at[j].set(kk)
+                            upd["v"] = upd["v"].at[j].set(vv)
+                    return hh, upd
+
+                h, new_cache = jax.lax.scan(body, h, (seg_params, seg_cache))
+                new_segs.append(new_cache)
+            cache = new_segs
+        h = norm(h, params["final_norm"], cfg.norm)
+        from repro.models.transformer import _logits as logits_impl
+        return logits_impl(params, h, cfg)[:, 0], cache
+
+    def _decode_ssm(params, h, pos, cache):
+        seg_params = params["segments"][0]
+        mamba_cache = cache["mamba"]
+        L, every = cfg.num_layers, cfg.shared_attn_every
+
+        def body(carry, xs):
+            hh = carry
+            lps, mc = xs
+            lp = jax.tree.map(lambda a: a[0], lps)
+            y, new_mc = ssm_mod.mamba_decode_step(
+                norm(hh, lp["ln1"], cfg.norm), lp["mamba"], cfg, mc)
+            return hh + y, new_mc
+
+        if every:
+            shared = cache["shared"]
+            sk, sv = shared["k"], shared["v"]
+            new_states = []
+            for gi, start in enumerate(range(0, L, every)):
+                sp = params["shared_attn"]
+                a, kk, vv = attn_mod.decode_attention(
+                    norm(h, sp["ln1"], cfg.norm), sp["attn"], cfg,
+                    sk[gi], sv[gi], pos, window=0)
+                h = h + a
+                h = h + moe_mod.mlp(norm(h, sp["ln2"], cfg.norm), sp["mlp"], cfg)
+                sk = sk.at[gi].set(kk)
+                sv = sv.at[gi].set(vv)
+                stop = min(start + every, L)
+                chunk = jax.tree.map(lambda a: a[start:stop], seg_params)
+                mchunk = jax.tree.map(lambda a: a[start:stop], mamba_cache)
+                h, states = jax.lax.scan(body, h, (chunk, mchunk))
+                new_states.append(states)
+            mamba_new = jax.tree.map(lambda *xs: jnp.concatenate(xs), *new_states)
+            return h, {"mamba": mamba_new, "shared": {"k": sk, "v": sv}}
+        h, states = jax.lax.scan(body, h, (seg_params, mamba_cache))
+        return h, {"mamba": states}
+
+    return init_cache, prefill, decode_step

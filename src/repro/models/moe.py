@@ -1,0 +1,145 @@
+"""Dense MLP and Mixture-of-Experts feed-forward.
+
+MoE dispatch IS the paper's COO SpMM (DESIGN.md §4): the token→expert-slot
+assignment is a sparse matrix with entries (dst = expert·capacity + rank,
+src = token, val = gate weight); dispatch multiplies it against the dense
+activation matrix, combine multiplies its transpose.  We implement it in
+exactly that streaming form — sort tokens by expert (the dst-major ordering of
+BlockedCOO), capacity-bounded slots (the packet padding), scatter/gather, and
+the gate-weighted combine (the val multiply).
+
+Per-batch-row dispatch keeps the sort local (S·k elements) and shards cleanly:
+xe [B, E, C, D] with B→data, E→model (expert parallelism).
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.common import act_fn, dense_init, split_keys
+
+Array = jax.Array
+
+
+# ---------------------------------------------------------------------------
+# dense MLP
+# ---------------------------------------------------------------------------
+def init_mlp(key, cfg: ModelConfig) -> Dict:
+    d, f = cfg.d_model, cfg.d_ff
+    if cfg.mlp == "glu":
+        ks = split_keys(key, 3)
+        return {
+            "w_gate": dense_init(ks[0], (d, f), d),
+            "w_up": dense_init(ks[1], (d, f), d),
+            "w_down": dense_init(ks[2], (f, d), f),
+        }
+    ks = split_keys(key, 2)
+    return {
+        "w_fc": dense_init(ks[0], (d, f), d),
+        "b_fc": jnp.zeros((f,), jnp.float32),
+        "w_proj": dense_init(ks[1], (f, d), f),
+        "b_proj": jnp.zeros((d,), jnp.float32),
+    }
+
+
+def mlp(x: Array, p: Dict, cfg: ModelConfig) -> Array:
+    if cfg.mlp == "glu":
+        h = act_fn(x @ p["w_gate"].astype(x.dtype), cfg.act) * (x @ p["w_up"].astype(x.dtype))
+        return h @ p["w_down"].astype(x.dtype)
+    h = act_fn(x @ p["w_fc"].astype(x.dtype) + p["b_fc"].astype(x.dtype), cfg.act)
+    return h @ p["w_proj"].astype(x.dtype) + p["b_proj"].astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# MoE
+# ---------------------------------------------------------------------------
+def init_moe(key, cfg: ModelConfig) -> Dict:
+    d, f, e = cfg.d_model, cfg.d_ff, cfg.num_experts
+    ks = split_keys(key, 4)
+    return {
+        "router": dense_init(ks[0], (d, e), d),
+        "w_gate": dense_init(ks[1], (e, d, f), d),
+        "w_up": dense_init(ks[2], (e, d, f), d),
+        "w_down": dense_init(ks[3], (e, f, d), f),
+    }
+
+
+def _capacity(tokens: int, cfg: ModelConfig, capacity_factor: float) -> int:
+    c = math.ceil(tokens * cfg.experts_per_token * capacity_factor / cfg.num_experts)
+    return max(1, min(tokens, (c + 3) // 4 * 4))
+
+
+def moe_ffn(x: Array, p: Dict, cfg: ModelConfig, capacity_factor: float = 0.0) -> Array:
+    """x [B, S, D] → [B, S, D]; top-k routing with capacity, COO-form dispatch."""
+    b, s, d = x.shape
+    e, k = cfg.num_experts, cfg.experts_per_token
+    cap = _capacity(s, cfg, capacity_factor or cfg.moe_capacity_factor)
+
+    logits = x @ p["router"].astype(x.dtype)            # [B, S, E]
+    gates = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
+    top_val, top_idx = jax.lax.top_k(gates, k)          # [B, S, k]
+    top_val = top_val / jnp.maximum(top_val.sum(-1, keepdims=True), 1e-9)
+
+    def dispatch_row(xr, ti, tv):
+        # -- the COO build: entries (dst=slot, src=token, val=gate) ----------
+        expert_flat = ti.reshape(-1)                    # [S*k] dst block ids
+        token_flat = jnp.repeat(jnp.arange(s), k)       # [S*k] src ids
+        gate_flat = tv.reshape(-1).astype(xr.dtype)     # [S*k] vals
+        order = jnp.argsort(expert_flat)                # dst-major stream order
+        es, ts, gs = expert_flat[order], token_flat[order], gate_flat[order]
+        # rank within expert = position in sorted run (capacity = packet pad)
+        rank = jnp.arange(s * k) - jnp.searchsorted(es, es, side="left")
+        valid = rank < cap
+        slot = jnp.where(valid, es * cap + rank, e * cap)   # overflow → dropped
+        # dispatch: scatter tokens into [E*C, D] (padded COO packets)
+        xe = jnp.zeros((e * cap + 1, d), xr.dtype).at[slot].set(xr[ts])
+        xe = xe[:-1].reshape(e, cap, d)
+        return xe, (slot, ts, gs)
+
+    xe, meta = jax.vmap(dispatch_row)(x, top_idx, top_val)   # [B, E, C, D]
+
+    # Explicit internal shardings (without them GSPMD replicates the dispatch
+    # buffers — measured 171 GB/device/layer on mixtral, EXPERIMENTS.md §Perf):
+    # EP mode: experts → "model";  TP mode (E ∤ axis): d_ff → "model".
+    from jax.sharding import PartitionSpec as _P
+    from repro.distributed.sharding import batch_axes, constrain, moe_mode
+    mode = moe_mode(e)
+    dp = batch_axes()
+    if mode == "ep":
+        xe = constrain(xe, _P(dp, "model", None, None))
+    elif mode == "tp":
+        xe = constrain(xe, _P(dp, None, None, None))
+    h = act_fn(jnp.einsum("becd,edf->becf", xe, p["w_gate"].astype(x.dtype)), cfg.act)
+    h = h * jnp.einsum("becd,edf->becf", xe, p["w_up"].astype(x.dtype))
+    if mode == "ep":
+        h = constrain(h, _P(dp, "model", None, None))
+    elif mode == "tp":
+        h = constrain(h, _P(dp, None, None, "model"))
+    ye = jnp.einsum("becf,efd->becd", h, p["w_down"].astype(x.dtype))   # [B,E,C,D]
+    if mode == "ep":
+        ye = constrain(ye, _P(dp, "model", None, None))
+    elif mode == "tp":
+        ye = constrain(ye, _P(dp, None, None, None))
+
+    def combine_row(yr, m):
+        slot, ts, gs = m
+        flat = yr.reshape(e * cap, d)
+        flat = jnp.concatenate([flat, jnp.zeros((1, d), yr.dtype)], axis=0)
+        contrib = flat[slot] * gs[:, None]              # val · gathered (SpMV form)
+        return jnp.zeros((s, d), yr.dtype).at[ts].add(contrib)
+
+    return jax.vmap(combine_row)(ye, meta)
+
+
+def router_aux_loss(x: Array, p: Dict, cfg: ModelConfig) -> Array:
+    """Load-balancing auxiliary loss (Switch-style): E · Σ_e f_e · P_e."""
+    logits = x @ p["router"].astype(x.dtype)
+    gates = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
+    top1 = jnp.argmax(gates, axis=-1)
+    frac = jnp.mean(jax.nn.one_hot(top1, cfg.num_experts, dtype=jnp.float32), axis=(0, 1))
+    prob = jnp.mean(gates, axis=(0, 1))
+    return cfg.num_experts * jnp.sum(frac * prob)

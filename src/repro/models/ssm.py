@@ -1,0 +1,185 @@
+"""Mamba2 (SSD — state-space duality, arXiv:2405.21060) layer.
+
+Chunked SSD algorithm: the sequence is split into chunks; within a chunk the
+recurrence is computed in its dual quadratic-attention form (MXU-friendly),
+and chunk-boundary states are passed with a lax.scan — O(S·chunk) compute,
+O(1) recurrent state.  Matches the reference `ssd_minimal_discrete` from the
+Mamba2 paper repo (validated in tests against a naive step-by-step scan).
+
+Decode maintains (conv buffer, SSD state) and is a pure O(1) state update.
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.common import dense_init, init_norm, rmsnorm, split_keys
+
+Array = jax.Array
+
+NGROUPS = 1  # B/C projection groups (mamba2 default 1 for these sizes)
+
+
+def init_mamba(key, cfg: ModelConfig) -> Dict:
+    d = cfg.d_model
+    di = cfg.ssm_d_inner
+    st = cfg.ssm_state
+    nh = cfg.ssm_heads
+    conv_dim = di + 2 * NGROUPS * st
+    ks = split_keys(key, 5)
+    return {
+        # in_proj → [z (di), x (di), B (g·st), C (g·st), dt (nh)]
+        "w_in": dense_init(ks[0], (d, 2 * di + 2 * NGROUPS * st + nh), d),
+        "conv_w": dense_init(ks[1], (cfg.ssm_conv, conv_dim), cfg.ssm_conv),
+        "conv_b": jnp.zeros((conv_dim,), jnp.float32),
+        "A_log": jnp.zeros((nh,), jnp.float32),
+        "D": jnp.ones((nh,), jnp.float32),
+        "dt_bias": jnp.zeros((nh,), jnp.float32),
+        "norm_w": jnp.ones((di,), jnp.float32),
+        "w_out": dense_init(ks[4], (di, d), di),
+    }
+
+
+def _split_proj(xz: Array, cfg: ModelConfig):
+    di, st, nh = cfg.ssm_d_inner, cfg.ssm_state, cfg.ssm_heads
+    z, x, B, C, dt = jnp.split(
+        xz, [di, 2 * di, 2 * di + NGROUPS * st, 2 * di + 2 * NGROUPS * st], axis=-1
+    )
+    return z, x, B, C, dt
+
+
+def _causal_conv(x: Array, w: Array, b: Array) -> Array:
+    """Depthwise causal conv1d: x [B,S,C], w [K,C] → [B,S,C]."""
+    k = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (k - 1, 0), (0, 0)))
+    # windowed sum: Σ_j x[t-k+1+j] w[j]  — unrolled over the tiny kernel (k=4)
+    out = sum(xp[:, j: j + x.shape[1], :] * w[j][None, None, :] for j in range(k))
+    return out + b[None, None, :]
+
+
+def _segsum(x: Array) -> Array:
+    """Stable segment-sum: L[i,j] = Σ_{j<m≤i} x[m] (−inf above diagonal)."""
+    T = x.shape[-1]
+    cs = jnp.cumsum(x, axis=-1)
+    diff = cs[..., :, None] - cs[..., None, :]
+    mask = jnp.tril(jnp.ones((T, T), bool))
+    return jnp.where(mask, diff, -jnp.inf)
+
+
+def ssd_chunked(x, dt, A, B, C, chunk: int):
+    """SSD forward.  x [b,s,h,p], dt [b,s,h] (post-softplus), A [h] (negative),
+    B,C [b,s,g,n].  Returns y [b,s,h,p] and final state [b,h,p,n]."""
+    b, s, h, p = x.shape
+    g, n = B.shape[-2], B.shape[-1]
+    nc = s // chunk
+    # reshape into chunks
+    xc = x.reshape(b, nc, chunk, h, p)
+    dtc = dt.reshape(b, nc, chunk, h)
+    Bc = B.reshape(b, nc, chunk, g, n)
+    Cc = C.reshape(b, nc, chunk, g, n)
+    dA = dtc * A[None, None, None, :]                     # [b,nc,l,h]
+    dA = dA.transpose(0, 1, 3, 2)                         # [b,nc,h,l]
+    dA_cs = jnp.cumsum(dA, axis=-1)
+    # 1. intra-chunk (diagonal blocks): quadratic within chunk
+    L = jnp.exp(_segsum(dA))                              # [b,nc,h,l,l]
+    # scores: C_i · B_j  (group-broadcast over heads: h per group = h//g)
+    CB = jnp.einsum("bclgn,bcsgn->bcgls", Cc, Bc)         # [b,nc,g,l,l]
+    hpg = h // g
+    CBh = jnp.repeat(CB, hpg, axis=2)                     # [b,nc,h,l,l]
+    xdt = xc * dtc[..., None]                             # [b,nc,l,h,p]
+    y_diag = jnp.einsum("bchls,bcshp->bclhp", CBh * L, xdt)
+    # 2. chunk-boundary states
+    decay_states = jnp.exp(dA_cs[..., -1:] - dA_cs)       # [b,nc,h,l]
+    states = jnp.einsum("bclgn,bchl,bclhp->bchpn",
+                        Bc, decay_states, xdt)            # [b,nc,h,p,n]
+    # 3. inter-chunk recurrence (scan over chunks)
+    chunk_decay = jnp.exp(dA_cs[..., -1])                 # [b,nc,h]
+
+    def scan_body(prev, inp):
+        st, dec = inp                                     # [b,h,p,n], [b,h]
+        new = prev * dec[..., None, None] + st
+        return new, prev                                  # emit state BEFORE chunk
+
+    init = jnp.zeros((b, h, p, n), x.dtype)
+    final, prev_states = jax.lax.scan(
+        scan_body, init,
+        (states.transpose(1, 0, 2, 3, 4), chunk_decay.transpose(1, 0, 2)),
+    )
+    prev_states = prev_states.transpose(1, 0, 2, 3, 4)    # [b,nc,h,p,n]
+    # 4. inter-chunk contribution to outputs
+    state_decay = jnp.exp(dA_cs)                          # [b,nc,h,l]
+    y_off = jnp.einsum("bclgn,bchpn,bchl->bclhp",
+                       Cc, jnp.repeat(prev_states, 1, axis=2), state_decay)
+    y = (y_diag + y_off).reshape(b, s, h, p)
+    return y, final
+
+
+def mamba_layer(x: Array, p: Dict, cfg: ModelConfig, chunk: int = 256) -> Array:
+    """Full mamba2 block: in_proj → conv → SSD → gate·norm → out_proj."""
+    b, s, d = x.shape
+    di, st, nh, hd = cfg.ssm_d_inner, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_head_dim
+    xz = x @ p["w_in"].astype(x.dtype)
+    z, xi, B, C, dt = _split_proj(xz, cfg)
+    conv_in = jnp.concatenate([xi, B, C], axis=-1)
+    conv_out = jax.nn.silu(_causal_conv(conv_in, p["conv_w"].astype(x.dtype),
+                                        p["conv_b"].astype(x.dtype)))
+    xi, B, C = jnp.split(conv_out, [di, di + NGROUPS * st], axis=-1)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"][None, None, :])
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+    ck = min(chunk, s)
+    y, _ = ssd_chunked(
+        xi.reshape(b, s, nh, hd).astype(jnp.float32),
+        dt, A,
+        B.reshape(b, s, NGROUPS, st).astype(jnp.float32),
+        C.reshape(b, s, NGROUPS, st).astype(jnp.float32),
+        ck,
+    )
+    y = y + xi.reshape(b, s, nh, hd).astype(jnp.float32) * p["D"][None, None, :, None]
+    y = y.reshape(b, s, di).astype(x.dtype)
+    y = rmsnorm(y * jax.nn.silu(z), p["norm_w"])
+    return y @ p["w_out"].astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# decode (O(1) state update)
+# ---------------------------------------------------------------------------
+def mamba_init_cache(cfg: ModelConfig, batch: int, dtype=jnp.float32):
+    di, st, nh, hd = cfg.ssm_d_inner, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_head_dim
+    conv_dim = di + 2 * NGROUPS * st
+    return {
+        "conv": jnp.zeros((batch, cfg.ssm_conv - 1, conv_dim), dtype),
+        "ssd": jnp.zeros((batch, nh, hd, st), jnp.float32),
+    }
+
+
+def mamba_decode_step(x, p, cfg: ModelConfig, cache: Dict) -> Tuple[Array, Dict]:
+    """x [B, 1, D] → (y [B, 1, D], new cache)."""
+    b = x.shape[0]
+    di, st, nh, hd = cfg.ssm_d_inner, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_head_dim
+    xz = x[:, 0] @ p["w_in"].astype(x.dtype)              # [B, ...]
+    z, xi, B, C, dt = _split_proj(xz, cfg)
+    conv_in = jnp.concatenate([xi, B, C], axis=-1)        # [B, conv_dim]
+    window = jnp.concatenate([cache["conv"], conv_in[:, None, :]], axis=1)  # [B,K,cd]
+    w = p["conv_w"].astype(x.dtype)
+    conv_out = jax.nn.silu((window * w[None]).sum(1) + p["conv_b"].astype(x.dtype))
+    xi, B, C = jnp.split(conv_out, [di, di + NGROUPS * st], axis=-1)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"][None, :])   # [B,nh]
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+    xh = xi.reshape(b, nh, hd).astype(jnp.float32)
+    Bg = B.reshape(b, NGROUPS, st).astype(jnp.float32)
+    Cg = C.reshape(b, NGROUPS, st).astype(jnp.float32)
+    hpg = nh // NGROUPS
+    Bh = jnp.repeat(Bg, hpg, axis=1)                      # [B,nh,st]
+    Ch = jnp.repeat(Cg, hpg, axis=1)
+    decay = jnp.exp(dt * A[None, :])                      # [B,nh]
+    state = cache["ssd"] * decay[..., None, None] \
+        + (dt[..., None] * xh)[..., None] * Bh[:, :, None, :]   # [B,nh,hd,st]
+    y = jnp.einsum("bhpn,bhn->bhp", state, Ch) + xh * p["D"][None, :, None]
+    y = y.reshape(b, di).astype(x.dtype)
+    y = rmsnorm(y * jax.nn.silu(z), p["norm_w"])
+    out = (y @ p["w_out"].astype(x.dtype))[:, None, :]
+    return out, {"conv": window[:, 1:], "ssd": state}

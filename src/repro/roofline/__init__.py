@@ -1,0 +1,16 @@
+from repro.roofline.analysis import (
+    HBM_BW,
+    ICI_BW,
+    PEAK_FLOPS,
+    RooflineTerms,
+    collective_bytes,
+    model_flops_forward,
+    model_flops_train,
+    roofline,
+)
+
+__all__ = [
+    "roofline", "RooflineTerms", "collective_bytes",
+    "model_flops_train", "model_flops_forward",
+    "PEAK_FLOPS", "HBM_BW", "ICI_BW",
+]

@@ -1,0 +1,124 @@
+"""Roofline terms from the compiled dry-run artifact (no hardware needed).
+
+  compute term    = HLO_FLOPs / (chips × peak_FLOP/s)
+  memory term     = HLO_bytes / (chips × HBM_bw)
+  collective term = collective_bytes / (chips × link_bw)
+
+Sources: ``compiled.cost_analysis()`` (flops / bytes accessed, reported for the
+per-device SPMD program) and the compiled HLO text for collective operand
+bytes (all-gather / all-reduce / reduce-scatter / all-to-all /
+collective-permute result shapes, which in SPMD form are per-device).
+
+Hardware model (TPU v5e, per chip): 197 TFLOP/s bf16, 819 GB/s HBM,
+50 GB/s ICI link bandwidth.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, Optional
+
+PEAK_FLOPS = 197e12        # bf16 per chip
+PEAK_FLOPS_F32 = 98.5e12   # f32 (half rate) — used when compute dtype is f32
+HBM_BW = 819e9             # B/s per chip
+ICI_BW = 50e9              # B/s per chip (per the assignment's formula)
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1,
+}
+
+_COLLECTIVE_RE = re.compile(
+    r"=\s*(?:\([^)]*\)|(?P<ty>\w+)\[(?P<shape>[\d,]*)\][^ ]*)\s*"
+    r"(?P<op>all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?\("
+)
+_TUPLE_ELT_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+
+def _bytes_of(ty: str, shape: str) -> int:
+    n = 1
+    for d in shape.split(","):
+        if d:
+            n *= int(d)
+    return n * _DTYPE_BYTES.get(ty, 4)
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, int]:
+    """Sum result bytes of every collective op in per-device HLO text."""
+    out: Dict[str, int] = {}
+    for line in hlo_text.splitlines():
+        m = _COLLECTIVE_RE.search(line)
+        if not m:
+            continue
+        op = m.group("op")
+        if m.group("ty"):
+            b = _bytes_of(m.group("ty"), m.group("shape"))
+        else:
+            # tuple result: sum elements inside the (...) before the op name
+            prefix = line.split(op)[0]
+            b = sum(_bytes_of(t, s) for t, s in _TUPLE_ELT_RE.findall(prefix))
+        out[op] = out.get(op, 0) + b
+    return out
+
+
+@dataclasses.dataclass
+class RooflineTerms:
+    flops_per_device: float
+    bytes_per_device: float
+    collective_bytes_per_device: float
+    collectives: Dict[str, int]
+    chips: int
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    bottleneck: str
+    model_flops: float = 0.0
+    useful_flops_ratio: float = 0.0
+    peak_flops: float = PEAK_FLOPS
+
+    def as_dict(self):
+        return dataclasses.asdict(self)
+
+
+def roofline(
+    cost: dict,
+    hlo_text: str,
+    chips: int,
+    model_flops: float = 0.0,
+    peak_flops: float = PEAK_FLOPS,
+) -> RooflineTerms:
+    flops = float(cost.get("flops", 0.0))
+    bytes_accessed = float(cost.get("bytes accessed", 0.0))
+    colls = collective_bytes(hlo_text)
+    cbytes = float(sum(colls.values()))
+    compute_s = flops / peak_flops
+    memory_s = bytes_accessed / HBM_BW
+    collective_s = cbytes / ICI_BW
+    terms = {"compute": compute_s, "memory": memory_s, "collective": collective_s}
+    bottleneck = max(terms, key=terms.get)
+    total_flops = flops * chips
+    return RooflineTerms(
+        flops_per_device=flops,
+        bytes_per_device=bytes_accessed,
+        collective_bytes_per_device=cbytes,
+        collectives=colls,
+        chips=chips,
+        compute_s=compute_s,
+        memory_s=memory_s,
+        collective_s=collective_s,
+        bottleneck=bottleneck,
+        model_flops=model_flops,
+        useful_flops_ratio=(model_flops / total_flops) if total_flops else 0.0,
+        peak_flops=peak_flops,
+    )
+
+
+def model_flops_train(cfg, tokens: int) -> float:
+    """6·N·D (dense) or 6·N_active·D (MoE) for one train step over D=tokens."""
+    return 6.0 * cfg.active_param_count() * tokens
+
+
+def model_flops_forward(cfg, tokens: int) -> float:
+    return 2.0 * cfg.active_param_count() * tokens

@@ -1,0 +1,11 @@
+from repro.training.checkpoint import latest_step, restore, save, save_async, wait_pending
+from repro.training.fault_tolerance import FaultConfig, run_resumable
+from repro.training.optimizer import AdamWConfig, adamw_update, init_opt_state
+from repro.training.train_loop import TrainState, init_train_state, make_train_step
+
+__all__ = [
+    "AdamWConfig", "adamw_update", "init_opt_state",
+    "TrainState", "init_train_state", "make_train_step",
+    "save", "save_async", "restore", "latest_step", "wait_pending",
+    "FaultConfig", "run_resumable",
+]

@@ -1,0 +1,94 @@
+"""Fault-tolerance runtime: restartable training driver with failure handling.
+
+What "handles node failures" means in this framework (and how each piece is
+exercised in this single-host container — tests/test_checkpoint.py):
+
+1. **Checkpoint/restart**: ``run_resumable`` discovers the latest atomic
+   checkpoint and resumes; any crash (simulated by killing the loop mid-step)
+   loses at most ``save_every`` steps.  At scale, jax.distributed detects a
+   failed host via the coordination service barrier timing out; the job
+   restarts on the surviving + replacement nodes and takes this exact path.
+2. **Elastic re-scale**: checkpoints store full logical arrays (mesh-agnostic),
+   so a restart may pass a *different* mesh — restore re-shards (e.g. a 2-pod
+   512-chip job falls back to 1 pod after a pod-level outage).
+3. **Straggler mitigation**: per-step wall-time is tracked with an EWMA; steps
+   slower than ``straggler_factor``× the EWMA are logged with the step index —
+   at scale this feeds the scheduler that re-assigns slow hosts.  Data input is
+   deterministic in (step, shard) so a restarted/reassigned host replays the
+   exact stream (no sample loss / duplication).
+4. **Preemption-safe saves**: saves are async + atomic; SIGTERM handlers flush
+   pending saves (``checkpoint.wait_pending``).
+"""
+from __future__ import annotations
+
+import dataclasses
+import signal
+import time
+from typing import Any, Callable, Optional
+
+import jax
+
+from repro.training import checkpoint as ckpt
+
+
+@dataclasses.dataclass
+class FaultConfig:
+    ckpt_dir: str = "/tmp/repro_ckpt"
+    save_every: int = 50
+    keep: int = 3
+    straggler_factor: float = 2.0
+    max_steps: int = 1000
+
+
+def run_resumable(
+    fault_cfg: FaultConfig,
+    init_state_fn: Callable[[], Any],
+    train_step,
+    batch_fn: Callable[[int], Any],
+    on_metrics: Optional[Callable[[int, dict], None]] = None,
+    fail_at_step: Optional[int] = None,   # test hook: simulated node failure
+):
+    """Run (or resume) training with periodic async checkpoints.
+
+    Returns (final_state, steps_run_this_invocation, straggler_steps).
+    """
+    last = ckpt.latest_step(fault_cfg.ckpt_dir)
+    if last is not None:
+        like = init_state_fn()
+        state = ckpt.restore(fault_cfg.ckpt_dir, last, like)
+        start = last
+    else:
+        state = init_state_fn()
+        start = 0
+
+    stop = {"flag": False}
+
+    def _sigterm(signum, frame):   # preemption: flush and exit cleanly
+        stop["flag"] = True
+
+    old = signal.signal(signal.SIGTERM, _sigterm)
+    ewma = None
+    stragglers = []
+    steps_run = 0
+    try:
+        for step in range(start, fault_cfg.max_steps):
+            if stop["flag"]:
+                break
+            if fail_at_step is not None and step == fail_at_step:
+                raise RuntimeError(f"simulated node failure at step {step}")
+            t0 = time.monotonic()
+            state, metrics = train_step(state, batch_fn(step))
+            jax.block_until_ready(jax.tree.leaves(state.params)[0])
+            dt = time.monotonic() - t0
+            ewma = dt if ewma is None else 0.9 * ewma + 0.1 * dt
+            if dt > fault_cfg.straggler_factor * ewma and step > start + 3:
+                stragglers.append((step, dt, ewma))
+            steps_run += 1
+            if on_metrics:
+                on_metrics(step, metrics)
+            if (step + 1) % fault_cfg.save_every == 0:
+                ckpt.save_async(fault_cfg.ckpt_dir, step + 1, state, keep=fault_cfg.keep)
+    finally:
+        ckpt.wait_pending()
+        signal.signal(signal.SIGTERM, old)
+    return state, steps_run, stragglers

@@ -1,0 +1,66 @@
+"""Ranking-metric unit tests (paper §5.3.1 definitions)."""
+import numpy as np
+
+from repro.core.metrics import (
+    edit_distance,
+    kendall_tau,
+    mae,
+    ndcg,
+    num_errors,
+    precision_at,
+    topk_indices,
+)
+
+
+def _scores_for_order(order, n=None):
+    """Score vector whose ranking equals `order`."""
+    n = n or len(order)
+    s = np.zeros(n)
+    for rank, idx in enumerate(order):
+        s[idx] = n - rank
+    return s
+
+
+def test_paper_example():
+    """Paper: correct top-4 {2,4,8,6} vs retrieved {4,8,6,2} → 4 errors, edit 1."""
+    ref = _scores_for_order([2, 4, 8, 6], n=10)
+    approx = _scores_for_order([4, 8, 6, 2], n=10)
+    assert num_errors(approx, ref, 4) == 4
+    assert edit_distance(approx, ref, 4) <= 2   # 1 insertion + trailing drop
+    assert precision_at(approx, ref, 4) == 1.0  # same set
+
+
+def test_perfect_ranking():
+    s = np.random.default_rng(0).random(100)
+    assert num_errors(s, s, 10) == 0
+    assert edit_distance(s, s, 20) == 0
+    assert ndcg(s, s, 50) == 1.0
+    assert precision_at(s, s, 10) == 1.0
+    assert kendall_tau(s, s, 20) == 1.0
+    assert mae(s, s) == 0.0
+
+
+def test_ndcg_penalizes_top_swaps_more():
+    ref = np.arange(100, dtype=float)
+    top_swap = ref.copy()
+    top_swap[[99, 98]] = top_swap[[98, 99]]     # swap ranks 1↔2
+    bottom_swap = ref.copy()
+    bottom_swap[[50, 51]] = bottom_swap[[51, 50]]
+    assert ndcg(top_swap, ref, 50) < ndcg(bottom_swap, ref, 50) <= 1.0
+
+
+def test_edit_distance_shift():
+    ref = _scores_for_order([0, 1, 2, 3, 4], n=20)
+    shifted = _scores_for_order([5, 0, 1, 2, 3], n=20)  # one insertion at front
+    assert edit_distance(shifted, ref, 5) <= 2
+    assert num_errors(shifted, ref, 5) == 5             # coarse metric: all moved
+
+
+def test_topk_deterministic_ties():
+    s = np.zeros(10)
+    assert topk_indices(s, 3).tolist() == [0, 1, 2]
+
+
+def test_kendall_reversal():
+    ref = np.arange(50, dtype=float)
+    assert abs(kendall_tau(-ref, ref, 10) - (-1.0)) < 1e-9

@@ -1,0 +1,79 @@
+"""MoE: COO-form dispatch vs per-token dense expert evaluation."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config, smoke_config
+from repro.models.moe import _capacity, init_moe, moe_ffn, router_aux_loss
+
+
+def _cfg(cap=8.0):
+    return dataclasses.replace(
+        smoke_config(get_config("mixtral-8x7b")), moe_capacity_factor=cap,
+        compute_dtype="float32")
+
+
+def _dense_reference(x, p, cfg):
+    """Per-token: route, evaluate chosen experts densely, combine."""
+    b, s, d = x.shape
+    logits = x @ p["router"]
+    gates = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
+    tv, ti = jax.lax.top_k(gates, cfg.experts_per_token)
+    tv = tv / tv.sum(-1, keepdims=True)
+    out = np.zeros((b, s, d), np.float32)
+    xn, tvn, tin = map(np.asarray, (x, tv, ti))
+    wg, wu, wd = map(np.asarray, (p["w_gate"], p["w_up"], p["w_down"]))
+    for bi in range(b):
+        for si in range(s):
+            acc = np.zeros(d, np.float32)
+            for j in range(cfg.experts_per_token):
+                e = int(tin[bi, si, j])
+                h = jax.nn.silu(xn[bi, si] @ wg[e]) * (xn[bi, si] @ wu[e])
+                acc += tvn[bi, si, j] * np.asarray(h @ wd[e])
+            out[bi, si] = acc
+    return out
+
+
+def test_moe_matches_dense_reference():
+    cfg = _cfg()
+    p = init_moe(jax.random.PRNGKey(0), cfg)
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.standard_normal((2, 10, cfg.d_model)), jnp.float32)
+    got = np.asarray(moe_ffn(x, p, cfg))
+    want = _dense_reference(x, p, cfg)
+    np.testing.assert_allclose(got, want, rtol=2e-4, atol=2e-5)
+
+
+def test_capacity_drops_tokens():
+    """With capacity_factor → tiny, overflow expert-slots are dropped (output
+    loses those contributions) but nothing is corrupted."""
+    cfg = _cfg(cap=0.25)
+    p = init_moe(jax.random.PRNGKey(0), cfg)
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.standard_normal((1, 16, cfg.d_model)), jnp.float32)
+    out = np.asarray(moe_ffn(x, p, cfg))
+    assert np.isfinite(out).all()
+    dense = _dense_reference(x, p, cfg)
+    row_match = np.isclose(out, dense, rtol=2e-4, atol=2e-5).all(-1)
+    assert not row_match.all(), "tiny capacity must actually drop contributions"
+    # dropped contributions only ever REMOVE expert outputs: with generous
+    # capacity the exact dense result comes back
+    out_full = np.asarray(moe_ffn(x, p, cfg, capacity_factor=8.0))
+    np.testing.assert_allclose(out_full, dense, rtol=2e-4, atol=2e-5)
+
+
+def test_capacity_formula():
+    cfg = _cfg()
+    assert _capacity(1, cfg, 1.0) >= 1
+    assert _capacity(1024, cfg, 1.25) <= 1024
+
+
+def test_router_aux_loss_bounds():
+    cfg = _cfg()
+    p = init_moe(jax.random.PRNGKey(0), cfg)
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.standard_normal((2, 32, cfg.d_model)), jnp.float32)
+    aux = float(router_aux_loss(x, p, cfg))
+    assert aux >= 1.0 - 1e-3  # E·Σ f·P ≥ 1 with equality at perfect balance

@@ -1,0 +1,81 @@
+"""Training substrate: optimizer math, loss decrease, gradient compression."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config, smoke_config
+from repro.data import DataConfig, synthetic_batch
+from repro.models import build_model
+from repro.training import AdamWConfig, init_train_state, make_train_step
+from repro.training.optimizer import adamw_update, init_opt_state, schedule
+
+
+def test_adamw_on_quadratic():
+    """AdamW drives a quadratic to its (decoupled-decay-shifted) optimum."""
+    cfg = AdamWConfig(lr=0.05, warmup_steps=1, total_steps=500, weight_decay=0.0,
+                      clip_norm=100.0)
+    target = jnp.asarray([1.0, -2.0, 3.0])
+    params = {"w": jnp.zeros(3)}
+    state = init_opt_state(params)
+
+    @jax.jit
+    def step(params, state):
+        grads = jax.grad(lambda p: jnp.sum((p["w"] - target) ** 2))(params)
+        return adamw_update(cfg, grads, state, params)
+
+    for _ in range(300):
+        params, state, m = step(params, state)
+    np.testing.assert_allclose(np.asarray(params["w"]), np.asarray(target), atol=1e-2)
+
+
+def test_schedule_shape():
+    cfg = AdamWConfig(lr=1.0, warmup_steps=10, total_steps=100, min_lr_ratio=0.1)
+    lrs = [float(schedule(cfg, jnp.asarray(s))) for s in [0, 5, 10, 50, 100]]
+    assert lrs[0] == 0.0
+    assert abs(lrs[2] - 1.0) < 1e-6          # end of warmup
+    assert lrs[3] < lrs[2]                   # decaying
+    assert abs(lrs[4] - 0.1) < 1e-6          # floor
+
+
+def test_microbatching_equals_full_batch():
+    """Gradient accumulation is exact: m=2 microbatches == one big batch."""
+    cfg = dataclasses.replace(smoke_config(get_config("gemma-2b")),
+                              compute_dtype="float32", num_layers=2,
+                              layer_pattern=(0, 0))
+    api = build_model(cfg, remat=False)
+    params = api.init_params(jax.random.PRNGKey(0))
+    dcfg = DataConfig(seq_len=8, global_batch=4)
+    batch = synthetic_batch(cfg, dcfg, 0)
+    opt = AdamWConfig(lr=1e-2, warmup_steps=1, total_steps=10)
+    s1 = jax.jit(make_train_step(api.loss_fn, opt, microbatches=1))
+    s2 = jax.jit(make_train_step(api.loss_fn, opt, microbatches=2))
+    st1, m1 = s1(init_train_state(params), batch)
+    st2, m2 = s2(init_train_state(params), batch)
+    # losses average the same samples; params should agree to fp tolerance
+    for a, b in zip(jax.tree.leaves(st1.params), jax.tree.leaves(st2.params)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=2e-4, atol=2e-5)
+
+
+def test_compressed_training_converges():
+    """Fixed-point gradient compression with error feedback still learns."""
+    cfg = dataclasses.replace(smoke_config(get_config("gemma-2b")),
+                              compute_dtype="float32", num_layers=2,
+                              layer_pattern=(0, 0))
+    api = build_model(cfg, remat=False)
+    params = api.init_params(jax.random.PRNGKey(0))
+    dcfg = DataConfig(seq_len=16, global_batch=8)
+    batch = synthetic_batch(cfg, dcfg, 0)
+    step = jax.jit(make_train_step(
+        api.loss_fn, AdamWConfig(lr=1e-3, warmup_steps=2, total_steps=30),
+        grad_compress_bits=8))
+    state = init_train_state(params, compress=True)
+    losses = []
+    for _ in range(10):
+        state, m = step(state, batch)
+        losses.append(float(m["loss"]))
+    assert losses[-1] < losses[0] - 0.3, losses
+    # residuals are bounded by the grid resolution
+    rmax = max(float(jnp.abs(r).max()) for r in jax.tree.leaves(state.residual))
+    assert rmax <= 2.0 ** -8 + 1e-6
