@@ -1,0 +1,84 @@
+"""Serving benchmark: queries/s and wave-latency p50/p95 vs κ and precision.
+
+The paper measures raw PPR execution time (Fig. 3); this measures the same
+datapath operated as a query service — κ-batch amortization shows up directly
+as queries/s scaling with κ, and reduced precision as lower per-wave latency
+(the edge-stream byte model of benchmarks/bench_ppr.py).
+
+    PYTHONPATH=src python benchmarks/bench_serving_ppr.py [--scale 0.02] [--dry-run]
+
+``--dry-run`` runs one tiny graph / two configurations in seconds — the CI
+smoke path (scripts/ci.sh).  Output is the house ``name,us_per_call,derived``
+CSV (us_per_call = mean per-query service time).
+"""
+from __future__ import annotations
+
+import argparse
+from typing import Dict, List
+
+import numpy as np
+
+from repro.graphs import holme_kim_powerlaw
+from repro.ppr_serving import PPRQuery, PPRService
+
+KAPPAS = (1, 4, 8, 16)
+PRECISIONS = (None, 26, 20)          # f32 reference + paper's widest/narrowest
+
+
+def _precision_label(p) -> str:
+    return "f32" if p is None else f"q{p}"
+
+
+def run(scale: float = 0.02, n_queries: int = 64, iterations: int = 10,
+        kappas=KAPPAS, precisions=PRECISIONS, seed: int = 0) -> List[Dict]:
+    g = holme_kim_powerlaw(max(128, int(128000 * scale)), m=3, seed=1)
+    rng = np.random.default_rng(seed)
+    users = rng.integers(0, g.num_vertices, n_queries)
+    rows: List[Dict] = []
+    for kappa in kappas:
+        for prec in precisions:
+            svc = PPRService(kappa=kappa, iterations=iterations,
+                             cache_capacity=0)      # measure compute, not cache
+            svc.register_graph("g", g, formats=[p for p in (prec,) if p])
+            queries = [PPRQuery("g", int(v), k=10, precision=prec) for v in users]
+            svc.serve(queries[: min(kappa, n_queries)])   # warm up jit
+            svc = PPRService(kappa=kappa, iterations=iterations, cache_capacity=0)
+            svc.register_graph("g", g, formats=[p for p in (prec,) if p])
+            svc.serve(queries)
+            s = svc.telemetry_summary()
+            rows.append({
+                "kappa": kappa,
+                "precision": _precision_label(prec),
+                "V": g.num_vertices,
+                "E": g.num_edges,
+                "queries": n_queries,
+                "queries_per_s": s["queries_per_s"],
+                "p50_s": s["wave_latency_p50_s"],
+                "p95_s": s["wave_latency_p95_s"],
+                "occupancy": s["mean_occupancy"],
+            })
+    return rows
+
+
+def main(scale: float = 0.02, dry_run: bool = False):
+    if dry_run:
+        rows = run(scale=0.005, n_queries=8, kappas=(2, 4), precisions=(None, 20))
+    else:
+        rows = run(scale=scale)
+    print("# serving: name,us_per_call,derived")
+    for r in rows:
+        us_per_query = 1e6 / r["queries_per_s"] if r["queries_per_s"] else 0.0
+        print(f"serving_k{r['kappa']}_{r['precision']},{us_per_query:.0f},"
+              f"qps={r['queries_per_s']:.1f}"
+              f";p50_us={r['p50_s']*1e6:.0f};p95_us={r['p95_s']*1e6:.0f}"
+              f";occupancy={r['occupancy']:.2f}")
+    return rows
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--scale", type=float, default=0.02)
+    ap.add_argument("--dry-run", action="store_true",
+                    help="tiny graph, two configs — the CI smoke path")
+    args = ap.parse_args()
+    main(scale=args.scale, dry_run=args.dry_run)

@@ -10,7 +10,8 @@ from __future__ import annotations
 
 import argparse
 
-from benchmarks import bench_accuracy, bench_convergence, bench_ppr, bench_spmv
+from benchmarks import (bench_accuracy, bench_convergence, bench_ppr,
+                        bench_serving_ppr, bench_spmv)
 from benchmarks import roofline_report
 
 
@@ -29,6 +30,8 @@ def main() -> None:
     bench_convergence.main(scale=scale)
     print("\n## bench_spmv (paper Table 2 analogue: kernel characterization)")
     bench_spmv.main(scale=scale)
+    print("\n## bench_serving_ppr (PPRService: queries/s, p50/p95 vs kappa x precision)")
+    bench_serving_ppr.main(scale=scale)
     print("\n## roofline (dry-run artifacts; EXPERIMENTS.md section Roofline)")
     roofline_report.main()
 

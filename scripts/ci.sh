@@ -1,0 +1,12 @@
+#!/usr/bin/env bash
+# CI entry point: tier-1 suite + the serving smoke benchmark.
+#   scripts/ci.sh
+set -euo pipefail
+cd "$(dirname "$0")/.."
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+echo "== tier-1: pytest =="
+python -m pytest -x -q
+
+echo "== smoke: PPRService benchmark (dry run) =="
+python benchmarks/bench_serving_ppr.py --dry-run

@@ -1,0 +1,34 @@
+"""Version shims for the jax API surface this repo uses.
+
+The codebase targets current jax (``jax.shard_map``, ``jax.set_mesh``); these
+aliases keep it running on the 0.4.x series where the same functionality lives
+under different names.
+"""
+from __future__ import annotations
+
+import contextlib
+
+import jax
+
+try:
+    shard_map = jax.shard_map
+except AttributeError:                      # jax < 0.6: under experimental
+    from jax.experimental.shard_map import shard_map  # type: ignore[no-redef]
+
+
+def set_mesh(mesh):
+    """Context manager form of ``jax.set_mesh``; a Mesh is its own context
+    manager on versions that predate the global setter."""
+    setter = getattr(jax, "set_mesh", None)
+    if setter is not None:
+        return setter(mesh)
+    return mesh if hasattr(mesh, "__enter__") else contextlib.nullcontext()
+
+
+def compiled_cost_analysis(compiled) -> dict:
+    """``Compiled.cost_analysis()`` returns a dict on current jax, a
+    one-per-program list on 0.4.x."""
+    ca = compiled.cost_analysis()
+    if isinstance(ca, (list, tuple)):
+        return ca[0] if ca else {}
+    return ca

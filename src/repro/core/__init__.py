@@ -10,12 +10,24 @@ from repro.core.fixed_point import (
     QFormat,
     format_for_bits,
 )
-from repro.core.ppr import PPRConfig, batched_ppr, make_ppr_fixed, ppr_float, run_ppr
+from repro.core.ppr import (
+    PPRConfig,
+    batched_ppr,
+    make_ppr_fixed,
+    make_ppr_fixed_step,
+    personalization_matrix,
+    personalization_matrix_fixed,
+    ppr_float,
+    ppr_step_float,
+    run_ppr,
+)
 from repro.core.spmv import spmv_fixed, spmv_float, spmv_pallas
 
 __all__ = [
     "COOGraph", "BlockedCOO", "QFormat", "format_for_bits",
     "Q1_19", "Q1_21", "Q1_23", "Q1_25", "PAPER_FORMATS", "BITWIDTH_TO_FORMAT",
     "PPRConfig", "run_ppr", "batched_ppr", "ppr_float", "make_ppr_fixed",
+    "ppr_step_float", "make_ppr_fixed_step",
+    "personalization_matrix", "personalization_matrix_fixed",
     "spmv_float", "spmv_fixed", "spmv_pallas",
 ]

@@ -6,6 +6,13 @@ P_{t+1} = α·X·P_t + α/|V|·(d̄ᵀP_t)·1 + (1−α)·V̄       (eq. 1)
 throughput optimization: every edge read is amortized over κ problems).
 The fixed-point variant reproduces the FPGA datapath bit-for-bit:
 truncating multiplies, raw-domain accumulation, truncating scale-by-α.
+
+The single-iteration bodies are exposed as ``ppr_step_float`` and
+``make_ppr_fixed_step`` so external drivers (repro.ppr_serving's wave
+scheduler) can advance one eq. (1) iteration at a time — e.g. to abort on a
+deadline or interleave waves — while the ``lax.scan`` drivers below stay the
+fast path for fixed iteration counts.  Both drivers share the same body
+functions, so step-driven and scanned results are bit-identical.
 """
 from __future__ import annotations
 
@@ -32,10 +39,83 @@ class PPRConfig:
     track_convergence: bool = True
 
 
-def _personalization_matrix(num_vertices: int, pers: Array, dtype=jnp.float32) -> Array:
+def personalization_matrix(num_vertices: int, pers: Array, dtype=jnp.float32) -> Array:
+    """V̄ of eq. (1): one-hot column per personalization vertex, [V, κ]."""
     k = pers.shape[0]
     V = jnp.zeros((num_vertices, k), dtype)
     return V.at[pers, jnp.arange(k)].set(jnp.ones((k,), dtype))
+
+
+def personalization_matrix_fixed(num_vertices: int, pers: Array, fmt: QFormat) -> Array:
+    """V̄ in the raw uint32 domain (1.0 is exactly representable in Q1.f)."""
+    one_raw = np.uint32(fmt.scale)
+    V = jnp.zeros((num_vertices, pers.shape[0]), jnp.uint32)
+    return V.at[pers, jnp.arange(pers.shape[0])].set(one_raw)
+
+
+_personalization_matrix = personalization_matrix  # backwards-compat alias
+
+
+# ----------------------------------------------------------------------------
+# single-iteration bodies (shared by the scan drivers and the step API)
+# ----------------------------------------------------------------------------
+def _float_iteration(x, y, val, d, Vmat, P, *, num_vertices: int, alpha: float):
+    dangling_mass = d @ P                                        # [K]
+    xp = spmv_float(x, y, val, P, num_vertices)
+    return alpha * xp + (alpha / num_vertices) * dangling_mass[None, :] \
+        + (1.0 - alpha) * Vmat
+
+
+def _fixed_consts(fmt: QFormat, num_vertices: int, alpha: float):
+    """Datapath scalars encoded in the format, so every multiply truncates
+    exactly like the FPGA DSP chain.  α/|V| underflows to 0 when 1/|V| < 2^-f —
+    exactly the behaviour the real datapath would exhibit (dangling mass
+    vanishes for big V)."""
+    return (np.uint32(int(alpha * fmt.scale)),
+            np.uint32(int((1.0 - alpha) * fmt.scale)),
+            np.uint32(int(alpha / num_vertices * fmt.scale)))
+
+
+def _fixed_iteration(x, y, val_raw, d_raw, Vmat, P, *, fmt: QFormat,
+                     num_vertices: int, alpha_raw, one_minus_alpha_raw,
+                     alpha_over_v_raw):
+    # dangling mass: Σ_{i dangling} P[i,k]  (raw-domain exact sum)
+    dangling_mass = (d_raw[:, None] * P).astype(jnp.int32).sum(0).astype(jnp.uint32)
+    xp = spmv_fixed(x, y, val_raw, P, num_vertices, fmt)
+    return fmt.add(
+        fmt.add(fmt.mul(jnp.asarray(alpha_raw), xp),
+                fmt.mul(jnp.asarray(alpha_over_v_raw), dangling_mass)[None, :]),
+        fmt.mul(jnp.asarray(one_minus_alpha_raw), Vmat),
+    )
+
+
+# ----------------------------------------------------------------------------
+# step API — one eq. (1) iteration per call, for external drivers
+# ----------------------------------------------------------------------------
+@functools.partial(jax.jit, static_argnames=("num_vertices", "alpha"))
+def ppr_step_float(
+    x: Array, y: Array, val: Array, dangling: Array, Vmat: Array, P: Array,
+    *, num_vertices: int, alpha: float,
+) -> Array:
+    """P_{t+1} from P_t, float32.  ``Vmat`` is the one-hot personalization matrix."""
+    return _float_iteration(x, y, val, dangling.astype(jnp.float32), Vmat, P,
+                            num_vertices=num_vertices, alpha=alpha)
+
+
+@functools.lru_cache(maxsize=64)
+def make_ppr_fixed_step(fmt: QFormat, num_vertices: int, alpha: float):
+    """Jitted bit-exact single iteration in the raw uint32 domain of ``fmt``."""
+    a_raw, oma_raw, aov_raw = _fixed_consts(fmt, num_vertices, alpha)
+
+    @jax.jit
+    def step(x: Array, y: Array, val_raw: Array, dangling: Array,
+             Vmat: Array, P: Array) -> Array:
+        return _fixed_iteration(
+            x, y, val_raw, dangling.astype(jnp.uint32), Vmat, P,
+            fmt=fmt, num_vertices=num_vertices, alpha_raw=a_raw,
+            one_minus_alpha_raw=oma_raw, alpha_over_v_raw=aov_raw)
+
+    return step
 
 
 # ----------------------------------------------------------------------------
@@ -47,14 +127,12 @@ def ppr_float(
     *, num_vertices: int, iterations: int, alpha: float,
 ) -> Tuple[Array, Array]:
     """Returns (P [V,K] float32, deltas [iterations] convergence trace)."""
-    V = _personalization_matrix(num_vertices, pers)
+    V = personalization_matrix(num_vertices, pers)
     d = dangling.astype(jnp.float32)
 
     def body(P, _):
-        dangling_mass = d @ P                                        # [K]
-        xp = spmv_float(x, y, val, P, num_vertices)
-        Pn = alpha * xp + (alpha / num_vertices) * dangling_mass[None, :] \
-            + (1.0 - alpha) * V
+        Pn = _float_iteration(x, y, val, d, V, P,
+                              num_vertices=num_vertices, alpha=alpha)
         delta = jnp.linalg.norm(Pn - P, axis=0).max()
         return Pn, delta
 
@@ -67,33 +145,19 @@ def ppr_float(
 # ----------------------------------------------------------------------------
 @functools.lru_cache(maxsize=64)
 def make_ppr_fixed(fmt: QFormat, num_vertices: int, iterations: int, alpha: float):
-    """Build a jitted bit-exact fixed-point PPR for one Q format.
-
-    Scalars α and (1−α) are themselves encoded in the format, so every multiply
-    in the datapath truncates exactly like the FPGA DSP chain.
-    """
-    alpha_raw = np.uint32(int(alpha * fmt.scale))
-    one_minus_alpha_raw = np.uint32(int((1.0 - alpha) * fmt.scale))
-    # α/|V| as a raw constant: underflows to 0 when 1/|V| < 2^-f — exactly the
-    # behaviour the real datapath would exhibit (dangling mass vanishes for big V).
-    alpha_over_v_raw = np.uint32(int(alpha / num_vertices * fmt.scale))
-    one_raw = np.uint32(fmt.scale)  # 1.0 is exactly representable in Q1.f
+    """Build a jitted bit-exact fixed-point PPR for one Q format."""
+    a_raw, oma_raw, aov_raw = _fixed_consts(fmt, num_vertices, alpha)
 
     @jax.jit
     def run(x: Array, y: Array, val_raw: Array, dangling: Array, pers: Array):
-        Vmat = jnp.zeros((num_vertices, pers.shape[0]), jnp.uint32)
-        Vmat = Vmat.at[pers, jnp.arange(pers.shape[0])].set(one_raw)
+        Vmat = personalization_matrix_fixed(num_vertices, pers, fmt)
         d_raw = dangling.astype(jnp.uint32)
 
         def body(P, _):
-            # dangling mass: Σ_{i dangling} P[i,k]  (raw-domain exact sum)
-            dangling_mass = (d_raw[:, None] * P).astype(jnp.int32).sum(0).astype(jnp.uint32)
-            xp = spmv_fixed(x, y, val_raw, P, num_vertices, fmt)
-            Pn = fmt.add(
-                fmt.add(fmt.mul(jnp.asarray(alpha_raw), xp),
-                        fmt.mul(jnp.asarray(alpha_over_v_raw), dangling_mass)[None, :]),
-                fmt.mul(jnp.asarray(one_minus_alpha_raw), Vmat),
-            )
+            Pn = _fixed_iteration(
+                x, y, val_raw, d_raw, Vmat, P,
+                fmt=fmt, num_vertices=num_vertices, alpha_raw=a_raw,
+                one_minus_alpha_raw=oma_raw, alpha_over_v_raw=aov_raw)
             delta = jnp.abs(Pn.astype(jnp.float32) - P.astype(jnp.float32))
             return Pn, jnp.sqrt((delta * delta).sum(0)).max() / fmt.scale
 

@@ -28,6 +28,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from repro.compat import shard_map
 from repro.core.fixed_point import QFormat
 
 Array = jax.Array
@@ -95,7 +96,7 @@ def make_sharded_spmv(mesh, axis: str, num_vertices: int):
         contrib = val[:, None] * p[y]
         return jax.ops.segment_sum(contrib, x_loc, num_segments=v_local)
 
-    return jax.shard_map(
+    return shard_map(
         local_spmv,
         mesh=mesh,
         in_specs=(P(axis), P(axis), P(axis), P()),
@@ -104,10 +105,16 @@ def make_sharded_spmv(mesh, axis: str, num_vertices: int):
 
 
 def partition_edges_by_dst(x, y, val, num_vertices: int, n_shards: int, packet: int = 256):
-    """Host-side: bucket edges by dst range and pad each shard to equal length."""
+    """Host-side: bucket edges by dst range and pad each shard to equal length.
+
+    Ranges are ceil(num_vertices / n_shards) wide, so when num_vertices does not
+    divide evenly the remainder vertices land in the (short) last shard instead
+    of a phantom shard ``n_shards`` whose edges were silently dropped.  The
+    divisible case is unchanged and matches ``make_sharded_spmv``'s layout.
+    """
     import numpy as np
 
-    v_local = num_vertices // n_shards
+    v_local = -(-num_vertices // n_shards)
     shard_of = np.asarray(x) // v_local
     shards = []
     max_e = 0

@@ -19,6 +19,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
+from repro.compat import shard_map
 from repro.configs.ppr_paper import PPR_WORKLOADS
 from repro.launch.mesh import make_production_mesh
 from repro.roofline.analysis import HBM_BW, ICI_BW, collective_bytes
@@ -51,7 +52,7 @@ def build_ppr_step(w, mesh):
         # columns over data so the model-axis all-gather never spans them
         # (16× less collective traffic than gathering all K_total columns).
         kspec = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
-        return jax.shard_map(
+        return shard_map(
             local, mesh=mesh,
             in_specs=(P("model"), P("model"), P("model"),
                       P("model", kspec), P(), P("model", kspec)),

@@ -1,0 +1,60 @@
+"""PPR query-serving subsystem — the paper's architecture as a service.
+
+The paper motivates PPR as "a common building block of recommender systems"
+and optimizes for query throughput, not exact convergence.  This package turns
+the numeric core (repro.core: float / bit-exact fixed / Pallas / sharded SpMV
++ batched PPR) into that consumer-facing system: a multi-tenant query service
+handling heavy traffic, the ROADMAP north star.
+
+DESIGN — component ↔ paper section map
+--------------------------------------
+``service.py``    The facade.  Registers named graphs once (device placement,
+                  packet padding, per-format quantization — the paper's §3
+                  preprocessing, amortized across a graph's lifetime), accepts
+                  ``PPRQuery(vertex, k, precision, deadline)`` and returns
+                  ranked ``Recommendation``s.  Per-query ``precision`` is the
+                  serving-side realization of §5.3's bit-width/accuracy dial.
+``scheduler.py``  κ-batch admission waves (§5.1's κ-batching as an *admission
+                  policy*): one wave amortizes a full edge-stream pass over up
+                  to κ personalization columns.  Deadline-aware flush launches
+                  partially-full waves so sparse traffic keeps bounded latency
+                  — the occupancy/latency trade-off the FPGA design implies
+                  but never had to schedule.
+``topk.py``       Streaming top-K over the [V, κ] rank matrix (the authors'
+                  Top-K SpMV follow-up, arXiv 2103.04808): dense ``lax.top_k``
+                  path plus a padded-tile O(k)-state streaming merge that works
+                  directly on the raw uint32 fixed-point domain (§4.1) — rank
+                  order is monotone in the raw encoding, so results never need
+                  dequantizing to be ranked.
+``cache.py``      LRU result cache keyed (graph, vertex, precision, k): repeat
+                  queries skip the §4 iteration pipeline entirely — the layer
+                  a hardware paper omits but a service cannot.
+``telemetry.py``  Wave latency, queries/s, batch occupancy, cache hit-rate —
+                  the serving analogues of the paper's Table 2 / Fig. 3
+                  throughput accounting.
+
+Follow-ons this layer enables (ROADMAP open items): multi-host sharded
+serving (route waves to spmv_sharded meshes), precision auto-tuning (pick the
+cheapest format meeting a per-query NDCG target), async prefetch of hot
+personalization vertices into the cache.
+"""
+from repro.ppr_serving.cache import LRUCache
+from repro.ppr_serving.scheduler import Wave, WaveScheduler
+from repro.ppr_serving.service import (
+    PPRQuery,
+    PPRService,
+    Recommendation,
+    RegisteredGraph,
+    normalize_precision,
+    precision_key,
+)
+from repro.ppr_serving.telemetry import ServiceTelemetry
+from repro.ppr_serving.topk import topk_dense, topk_streaming
+
+__all__ = [
+    "PPRService", "PPRQuery", "Recommendation", "RegisteredGraph",
+    "normalize_precision", "precision_key",
+    "WaveScheduler", "Wave",
+    "LRUCache", "ServiceTelemetry",
+    "topk_dense", "topk_streaming",
+]

@@ -1,0 +1,93 @@
+"""κ-batch admission scheduler — the paper's batching as a serving policy.
+
+Mirrors ``repro.serving.engine``'s slot batcher, specialized for PPR: one wave
+amortizes a full edge-stream pass over up to κ personalization vertices, so
+admission fills waves per (graph, precision) key — queries on different graphs
+or Q formats cannot share a stream and therefore never share a wave.
+
+Flush policy (deadline-aware): a full wave of κ launches immediately; a
+partially-full wave launches once *any* occupant has waited out its admission
+budget — min(service ``max_wait``, the query's own ``deadline``) — so a
+trickle of traffic still gets bounded latency at the cost of occupancy.
+Time is injectable (``time_fn``) to keep the policy deterministic under test.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from collections import OrderedDict
+from typing import Any, Hashable, List, Optional
+
+
+@dataclasses.dataclass
+class _Pending:
+    item: Any
+    enqueued_at: float
+    deadline: Optional[float]      # max seconds this item may wait for batching
+
+    def flush_at(self, max_wait: float) -> float:
+        budget = max_wait if self.deadline is None else min(max_wait, self.deadline)
+        return self.enqueued_at + budget
+
+
+@dataclasses.dataclass
+class Wave:
+    """One κ-batched launch: all items share a (graph, precision) stream."""
+    key: Hashable                  # (graph, precision) in the PPR service
+    items: List[Any]
+    full: bool                     # False ⇒ deadline-flushed partial wave
+
+    def __len__(self) -> int:
+        return len(self.items)
+
+
+class WaveScheduler:
+    def __init__(self, kappa: int, max_wait: float = 0.0, time_fn=time.monotonic):
+        if kappa < 1:
+            raise ValueError(f"kappa must be >= 1, got {kappa}")
+        self.kappa = kappa
+        self.max_wait = max_wait
+        self.time_fn = time_fn
+        self._queues: "OrderedDict[Hashable, List[_Pending]]" = OrderedDict()
+
+    # ------------------------------------------------------------------
+    def submit(self, key: Hashable, item: Any,
+               deadline: Optional[float] = None,
+               now: Optional[float] = None) -> None:
+        now = self.time_fn() if now is None else now
+        self._queues.setdefault(key, []).append(_Pending(item, now, deadline))
+
+    def pending(self) -> int:
+        return sum(len(q) for q in self._queues.values())
+
+    # ------------------------------------------------------------------
+    def ready_waves(self, now: Optional[float] = None) -> List[Wave]:
+        """Pop every launchable wave: all full waves, plus partial waves in
+        which *any* occupant's admission budget has expired (a late query with
+        a tight deadline must not wait on the oldest occupant's looser one;
+        the whole partial queue rides the flushed wave — that is the point of
+        batching)."""
+        now = self.time_fn() if now is None else now
+        waves: List[Wave] = []
+        for key in list(self._queues):
+            q = self._queues[key]
+            while len(q) >= self.kappa:
+                waves.append(Wave(key, [p.item for p in q[: self.kappa]], full=True))
+                del q[: self.kappa]
+            if q and now >= min(p.flush_at(self.max_wait) for p in q):
+                waves.append(Wave(key, [p.item for p in q], full=False))
+                q.clear()
+            if not q:
+                del self._queues[key]
+        return waves
+
+    def drain(self) -> List[Wave]:
+        """Flush everything unconditionally (end-of-batch / shutdown path)."""
+        waves: List[Wave] = []
+        for key in list(self._queues):
+            q = self._queues.pop(key)
+            for i in range(0, len(q), self.kappa):
+                chunk = q[i: i + self.kappa]
+                waves.append(Wave(key, [p.item for p in chunk],
+                                  full=len(chunk) == self.kappa))
+        return waves

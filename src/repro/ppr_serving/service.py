@@ -1,0 +1,270 @@
+"""`PPRService` — the multi-tenant query-serving facade over the numeric core.
+
+Lifecycle: graphs are registered once (host arrays moved to device, edge
+stream padded to packets, per-format quantized values cached), then queries
+flow through
+
+    submit → result cache probe → κ-batch scheduler → wave launch
+           → step-driven PPR iterations → streaming top-K → cache fill
+
+A wave shares one edge stream over up to κ personalization columns (the
+paper's κ-batching); each wave is driven one eq. (1) iteration at a time via
+``ppr_step_float`` / ``make_ppr_fixed_step`` so future work can abort or
+re-prioritize mid-flight.  Results are ranked ``Recommendation``s — the query
+vertex itself is always excluded from its own top-k.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Dict, List, Optional, Sequence, Tuple, Union
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.coo import COOGraph
+from repro.core.fixed_point import PAPER_FORMATS, QFormat, format_for_bits
+from repro.core.ppr import (
+    make_ppr_fixed_step,
+    personalization_matrix,
+    personalization_matrix_fixed,
+    ppr_step_float,
+)
+from repro.ppr_serving.cache import LRUCache
+from repro.ppr_serving.scheduler import Wave, WaveScheduler
+from repro.ppr_serving.telemetry import ServiceTelemetry
+from repro.ppr_serving.topk import topk_dense, topk_streaming
+
+Precision = Union[None, int, str, QFormat]
+
+FLOAT_KEY = "f32"
+
+
+def normalize_precision(precision: Precision) -> Optional[QFormat]:
+    """None/"f32" → float32 path; int bits / "Q1.f" / QFormat → fixed path."""
+    if precision is None or precision == FLOAT_KEY:
+        return None
+    if isinstance(precision, QFormat):
+        return precision
+    if isinstance(precision, int):
+        return format_for_bits(precision)
+    if isinstance(precision, str):
+        if precision in PAPER_FORMATS:
+            return PAPER_FORMATS[precision]
+        if precision.startswith("Q") and "." in precision:
+            i, f = precision[1:].split(".")
+            return QFormat(int(i), int(f))
+    raise ValueError(f"unknown precision spec: {precision!r}")
+
+
+def precision_key(precision: Precision) -> str:
+    fmt = normalize_precision(precision)
+    return FLOAT_KEY if fmt is None else fmt.name
+
+
+@dataclasses.dataclass(frozen=True)
+class PPRQuery:
+    """One recommendation request.
+
+    ``deadline`` bounds how long the query may wait in the admission queue for
+    its wave to fill (seconds); it does not bound the iteration time itself.
+    """
+    graph: str
+    vertex: int
+    k: int = 10
+    precision: Precision = None
+    deadline: Optional[float] = None
+
+
+@dataclasses.dataclass
+class Recommendation:
+    query: PPRQuery
+    vertices: np.ndarray           # [k] ranked vertex ids (self excluded)
+    scores: np.ndarray             # [k] float scores (dequantized for fixed)
+    source: str                    # "wave" | "cache"
+    wave_id: int = -1
+    latency_s: float = 0.0
+
+
+class RegisteredGraph:
+    """Device-resident graph state, prepared once at registration."""
+
+    def __init__(self, name: str, g: COOGraph, packet: int = 256):
+        self.name = name
+        self.graph = g.pad_to_packets(packet)
+        self.num_vertices = g.num_vertices
+        self.x = jnp.asarray(self.graph.x)
+        self.y = jnp.asarray(self.graph.y)
+        self.val = jnp.asarray(self.graph.val)
+        self.dangling = jnp.asarray(self.graph.dangling)
+        self._quantized: Dict[QFormat, jnp.ndarray] = {}
+
+    def quantized(self, fmt: QFormat) -> jnp.ndarray:
+        if fmt not in self._quantized:
+            self._quantized[fmt] = jnp.asarray(self.graph.quantized_val(fmt))
+        return self._quantized[fmt]
+
+
+class PPRService:
+    """Facade: named graphs, κ-batched admission, cached ranked results."""
+
+    def __init__(
+        self,
+        kappa: int = 8,
+        iterations: int = 10,
+        alpha: float = 0.85,
+        max_wait: float = 0.0,
+        cache_capacity: int = 4096,
+        topk_tile: Optional[int] = None,
+        time_fn=time.monotonic,
+    ):
+        self.kappa = kappa
+        self.iterations = iterations
+        self.alpha = alpha
+        self.topk_tile = topk_tile
+        self.time_fn = time_fn
+        self.scheduler = WaveScheduler(kappa, max_wait=max_wait, time_fn=time_fn)
+        self.cache = LRUCache(cache_capacity)
+        self.telemetry = ServiceTelemetry()
+        self._graphs: Dict[str, RegisteredGraph] = {}
+        self._wave_counter = 0
+
+    # ------------------------------------------------------------------
+    def register_graph(self, name: str, g: COOGraph,
+                       formats: Sequence[Precision] = (),
+                       packet: int = 256) -> RegisteredGraph:
+        """Move a graph to the device; optionally pre-quantize for ``formats``."""
+        rg = RegisteredGraph(name, g, packet=packet)
+        for p in formats:
+            fmt = normalize_precision(p)
+            if fmt is not None:
+                rg.quantized(fmt)
+        self._graphs[name] = rg
+        return rg
+
+    @property
+    def graphs(self) -> Tuple[str, ...]:
+        return tuple(self._graphs)
+
+    # ------------------------------------------------------------------
+    def _cache_key(self, q: PPRQuery) -> Tuple:
+        return (q.graph, int(q.vertex), precision_key(q.precision), int(q.k))
+
+    def submit(self, q: PPRQuery) -> Optional[Recommendation]:
+        """Cache probe; on miss, enqueue for the next wave and return None."""
+        if q.graph not in self._graphs:
+            raise KeyError(f"graph {q.graph!r} is not registered "
+                           f"(have {list(self._graphs)})")
+        if not 0 <= q.vertex < self._graphs[q.graph].num_vertices:
+            raise ValueError(f"vertex {q.vertex} out of range for {q.graph!r}")
+        hit = self.cache.get(self._cache_key(q))
+        self.telemetry.record_cache(hit is not None)
+        if hit is not None:
+            verts, scores = hit
+            return Recommendation(q, verts.copy(), scores.copy(), source="cache")
+        self.scheduler.submit((q.graph, precision_key(q.precision)), q,
+                              deadline=q.deadline)
+        return None
+
+    def pump(self, now: Optional[float] = None) -> List[Recommendation]:
+        """Launch every wave the admission policy considers ready."""
+        recs: List[Recommendation] = []
+        for wave in self.scheduler.ready_waves(now=now):
+            recs.extend(self._run_wave(wave))
+        return recs
+
+    def drain(self) -> List[Recommendation]:
+        """Flush all pending queries regardless of occupancy."""
+        recs: List[Recommendation] = []
+        for wave in self.scheduler.drain():
+            recs.extend(self._run_wave(wave))
+        return recs
+
+    def serve(self, queries: Sequence[PPRQuery]) -> List[Recommendation]:
+        """Synchronous batch entry point: results in submission order.
+
+        Waves complete out of submission order when precisions or graphs mix
+        (each (graph, precision) group fills independently), so results are
+        matched back by query identity, not queue position.
+        """
+        from collections import defaultdict, deque
+
+        out: Dict[int, Recommendation] = {}
+        slot: Dict[int, deque] = defaultdict(deque)   # id(query) → indices FIFO
+        # Admit the whole batch before pumping so full κ-waves form regardless
+        # of max_wait (submit-then-pump per query would flush 1-query partials
+        # whenever max_wait=0).
+        for i, q in enumerate(queries):
+            rec = self.submit(q)
+            if rec is not None:
+                out[i] = rec
+            else:
+                slot[id(q)].append(i)
+        # Queries queued via submit() before this serve() call ride along in
+        # the same waves; their results are cached/telemetered but belong to
+        # no slot here, so route only our own.
+        for rec in self.pump() + self.drain():
+            idxs = slot.get(id(rec.query))
+            if idxs:
+                out[idxs.popleft()] = rec
+        return [out[i] for i in range(len(queries))]
+
+    def telemetry_summary(self) -> Dict[str, float]:
+        """Telemetry counters (cache_* = submit-path view) plus the LRU's own
+        stats under lru_* — the two diverge once anything touches the cache
+        outside submit() (e.g. a future async prefetcher)."""
+        s = self.telemetry.summary()
+        s.update({f"lru_{k}": v for k, v in self.cache.stats().items()})
+        return s
+
+    # ------------------------------------------------------------------
+    def _run_wave(self, wave: Wave) -> List[Recommendation]:
+        graph_name, pkey = wave.key
+        rg = self._graphs[graph_name]
+        fmt = None if pkey == FLOAT_KEY else normalize_precision(pkey)
+        t0 = self.time_fn()
+        self._wave_counter += 1
+        wave_id = self._wave_counter
+
+        verts = [int(q.vertex) for q in wave.items]
+        pad = self.kappa - len(verts)
+        padded = verts + [verts[0]] * pad           # pad columns are discarded
+        pers = jnp.asarray(np.asarray(padded, np.int32))
+
+        if fmt is None:
+            Vmat = personalization_matrix(rg.num_vertices, pers)
+            P = Vmat
+            for _ in range(self.iterations):
+                P = ppr_step_float(rg.x, rg.y, rg.val, rg.dangling, Vmat, P,
+                                   num_vertices=rg.num_vertices, alpha=self.alpha)
+        else:
+            Vmat = personalization_matrix_fixed(rg.num_vertices, pers, fmt)
+            P = Vmat
+            step = make_ppr_fixed_step(fmt, rg.num_vertices, self.alpha)
+            val_raw = rg.quantized(fmt)
+            for _ in range(self.iterations):
+                P = step(rg.x, rg.y, val_raw, rg.dangling, Vmat, P)
+
+        k_max = max(q.k for q in wave.items)
+        if self.topk_tile is not None:
+            idx, vals = topk_streaming(P, k_max, v_tile=self.topk_tile,
+                                       exclude=pers)
+        else:
+            idx, vals = topk_dense(P, k_max, exclude=pers)
+        idx = np.asarray(idx)                        # [κ, k_max]
+        vals = np.asarray(vals)
+        scores = vals.astype(np.float64) / fmt.scale if fmt is not None \
+            else vals.astype(np.float64)
+        latency = self.time_fn() - t0
+
+        recs = []
+        for col, q in enumerate(wave.items):
+            v_top = idx[col, : q.k].copy()
+            s_top = scores[col, : q.k].copy()
+            # the cache keeps its own copies: callers may mutate their
+            # Recommendation arrays without poisoning later hits
+            self.cache.put(self._cache_key(q), (v_top.copy(), s_top.copy()))
+            recs.append(Recommendation(q, v_top, s_top, source="wave",
+                                       wave_id=wave_id, latency_s=latency))
+        self.telemetry.record_wave(len(wave.items), self.kappa, latency, pkey)
+        return recs

@@ -1,0 +1,59 @@
+"""Service telemetry: per-wave latency, throughput, batch occupancy, cache
+hit-rate.
+
+The occupancy counter is the serving-side view of the paper's κ-batching
+economics: a wave amortizes one full edge-stream pass over its occupants, so
+mean occupancy × κ is the effective amortization factor actually achieved
+under real traffic (deadline flushes of partial waves lower it).
+"""
+from __future__ import annotations
+
+from typing import Dict, List
+
+import numpy as np
+
+
+class ServiceTelemetry:
+    def __init__(self) -> None:
+        self.wave_latencies_s: List[float] = []
+        self.wave_occupancies: List[float] = []
+        self.wave_precisions: List[str] = []
+        self.queries_served = 0
+        self.cache_hits = 0
+        self.cache_misses = 0
+
+    # ------------------------------------------------------------------
+    def record_wave(self, n_queries: int, kappa: int, latency_s: float,
+                    precision: str) -> None:
+        self.wave_latencies_s.append(float(latency_s))
+        self.wave_occupancies.append(n_queries / float(kappa))
+        self.wave_precisions.append(precision)
+        self.queries_served += n_queries
+
+    def record_cache(self, hit: bool) -> None:
+        if hit:
+            self.cache_hits += 1
+        else:
+            self.cache_misses += 1
+
+    # ------------------------------------------------------------------
+    @property
+    def waves(self) -> int:
+        return len(self.wave_latencies_s)
+
+    def summary(self) -> Dict[str, float]:
+        lat = np.asarray(self.wave_latencies_s, np.float64)
+        total_s = float(lat.sum()) if lat.size else 0.0
+        cache_total = self.cache_hits + self.cache_misses
+        return {
+            "waves": self.waves,
+            "queries_served": self.queries_served,
+            "queries_per_s": self.queries_served / total_s if total_s else 0.0,
+            "wave_latency_p50_s": float(np.percentile(lat, 50)) if lat.size else 0.0,
+            "wave_latency_p95_s": float(np.percentile(lat, 95)) if lat.size else 0.0,
+            "mean_occupancy": float(np.mean(self.wave_occupancies))
+            if self.wave_occupancies else 0.0,
+            "cache_hits": self.cache_hits,
+            "cache_misses": self.cache_misses,
+            "cache_hit_rate": self.cache_hits / cache_total if cache_total else 0.0,
+        }

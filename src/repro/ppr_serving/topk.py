@@ -1,0 +1,111 @@
+"""Top-K extraction over the [V, κ] rank matrix (Parravicini et al.'s Top-K
+SpMV follow-up, arXiv 2103.04808: recommender consumers want ranked top-K
+results, not dense rank vectors).
+
+Two paths, identical results:
+
+1. ``topk_dense``      one ``lax.top_k`` over the full column — the XLA
+                       production path when the dense rank matrix already
+                       sits in device memory.
+2. ``topk_streaming``  padded-tile variant: the matrix is consumed in
+                       ``v_tile``-vertex tiles with an O(k) running buffer per
+                       column, mirroring how an FPGA/TPU kernel fuses top-K
+                       into the SpMV output stream without materializing dense
+                       ranks in HBM.  V is padded to a whole number of tiles.
+
+Both paths operate on float32 scores *or* on the raw uint32 fixed-point domain
+directly: rank order is monotone in the raw encoding, so no dequantization is
+needed (ties in raw are exactly ties after scaling).
+
+Determinism: equal scores rank by ascending vertex id, matching
+``repro.core.metrics.topk_indices``'s lexsort oracle — ``lax.top_k`` returns
+the lower index first on ties, and the streaming merge keeps earlier-tile
+candidates ahead of the current tile.  Integer-domain pad rows carry value 0
+but the largest vertex ids, so real zero-score vertices win ties against them.
+
+Self-exclusion: a recommender must not recommend the query vertex itself.
+``exclude`` removes one vertex per column by *deletion*, not value-masking:
+the merge runs with a k+1 buffer and the excluded vertex is dropped from the
+result where present (value-masking to the domain minimum is wrong in the raw
+uint32 domain — a masked vertex re-enters on zero-score ties when a column has
+fewer than k nonzero ranks).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+def _drop_excluded(idx: Array, vals: Array, exclude: Array, k: int
+                   ) -> Tuple[Array, Array]:
+    """Remove the (at most one) excluded entry per row of a top-(k+1) result,
+    preserving order, and truncate to k."""
+    is_ex = idx == exclude[:, None].astype(idx.dtype)
+    order = jnp.argsort(is_ex, axis=1, stable=True)   # kept entries first, in order
+    idx = jnp.take_along_axis(idx, order, axis=1)[:, :k]
+    vals = jnp.take_along_axis(vals, order, axis=1)[:, :k]
+    return idx, vals
+
+
+@functools.partial(jax.jit, static_argnames=("k",))
+def topk_dense(P: Array, k: int, exclude: Optional[Array] = None
+               ) -> Tuple[Array, Array]:
+    """(vertices [κ, k], scores [κ, k]) of the k highest-ranked per column,
+    with ``exclude[j]`` (usually the query vertex) deleted from column j."""
+    kk = k if exclude is None else k + 1
+    if kk > P.shape[0]:
+        raise ValueError(f"k={k} (+exclusion) exceeds num_vertices={P.shape[0]}")
+    vals, idx = jax.lax.top_k(P.T, kk)                # [K, kk]
+    idx = idx.astype(jnp.int32)
+    if exclude is None:
+        return idx, vals
+    return _drop_excluded(idx, vals, jnp.asarray(exclude, jnp.int32), k)
+
+
+@functools.partial(jax.jit, static_argnames=("k", "v_tile"))
+def topk_streaming(P: Array, k: int, v_tile: int = 1024,
+                   exclude: Optional[Array] = None) -> Tuple[Array, Array]:
+    """Streaming merge over padded vertex tiles; == ``topk_dense`` bit-for-bit.
+
+    Requires v_tile ≥ k+1 (the running buffer is seeded from the first tile).
+    """
+    kk = k if exclude is None else k + 1
+    if v_tile < kk:
+        raise ValueError(f"v_tile={v_tile} must be >= k(+exclusion)={kk}")
+    if kk > P.shape[0]:
+        raise ValueError(f"k={k} (+exclusion) exceeds num_vertices={P.shape[0]}")
+    v, kappa = P.shape
+    n_tiles = -(-v // v_tile)
+    vp = n_tiles * v_tile
+    if vp != v:
+        pad_val = jnp.zeros((), P.dtype) if jnp.issubdtype(P.dtype, jnp.integer) \
+            else jnp.asarray(-jnp.inf, P.dtype)
+        P = jnp.concatenate(
+            [P, jnp.full((vp - v, kappa), pad_val, P.dtype)], axis=0)
+    tiles = P.reshape(n_tiles, v_tile, kappa)
+
+    # seed the O(kk) running buffer from tile 0
+    vals0, sel0 = jax.lax.top_k(tiles[0].T, kk)       # [K, kk]
+    idx0 = sel0.astype(jnp.int32)
+
+    def merge(carry, inp):
+        cv, ci = carry                                # [K, kk]
+        tile, base = inp                              # [v_tile, K], scalar
+        tile_ids = jnp.broadcast_to(base + jnp.arange(v_tile, dtype=jnp.int32),
+                                    (kappa, v_tile))
+        cand_v = jnp.concatenate([cv, tile.T], axis=1)        # [K, kk+v_tile]
+        cand_i = jnp.concatenate([ci, tile_ids], axis=1)
+        nv, sel = jax.lax.top_k(cand_v, kk)
+        ni = jnp.take_along_axis(cand_i, sel, axis=1)
+        return (nv, ni), None
+
+    bases = (jnp.arange(1, n_tiles, dtype=jnp.int32)) * v_tile
+    (vals, idx), _ = jax.lax.scan(merge, (vals0, idx0), (tiles[1:], bases))
+    if exclude is None:
+        return idx, vals
+    return _drop_excluded(idx, vals, jnp.asarray(exclude, jnp.int32), k)

@@ -1,0 +1,56 @@
+"""Shared test setup: keep the tier-1 suite collectable on bare environments.
+
+Several modules (test_fixed_point, test_kernels, test_ssd) use hypothesis
+property tests.  When hypothesis is not installed, a hard import error would
+take down *collection* of every test in those files — including the plain
+parametrized ones.  Install a thin fallback instead: strategy expressions
+evaluate to inert placeholders and each ``@given`` test becomes a skip, so
+the rest of the suite runs unchanged.  ``pip install -r requirements-dev.txt``
+restores the real property tests.
+"""
+import sys
+import types
+
+try:  # pragma: no cover - trivial when hypothesis is present
+    import hypothesis  # noqa: F401
+except ModuleNotFoundError:
+    import pytest
+
+    def _strategy(*args, **kwargs):
+        return None  # inert placeholder; only ever passed to the stub `given`
+
+    strategies = types.ModuleType("hypothesis.strategies")
+    for _name in ("integers", "floats", "lists", "sampled_from", "booleans",
+                  "tuples", "just", "text", "binary", "one_of"):
+        setattr(strategies, _name, _strategy)
+
+    def _composite(fn):
+        def build(*args, **kwargs):
+            return None
+        build.__name__ = getattr(fn, "__name__", "composite")
+        return build
+
+    strategies.composite = _composite
+
+    def _given(*args, **kwargs):
+        def deco(fn):
+            # zero-arg wrapper: pytest must not try to resolve the test's
+            # strategy parameters as fixtures
+            def skipper():
+                pytest.skip("hypothesis not installed (see requirements-dev.txt)")
+            skipper.__name__ = fn.__name__
+            skipper.__doc__ = fn.__doc__
+            return skipper
+        return deco
+
+    def _settings(*args, **kwargs):
+        def deco(fn):
+            return fn
+        return deco
+
+    hyp = types.ModuleType("hypothesis")
+    hyp.given = _given
+    hyp.settings = _settings
+    hyp.strategies = strategies
+    sys.modules["hypothesis"] = hyp
+    sys.modules["hypothesis.strategies"] = strategies

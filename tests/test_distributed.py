@@ -24,6 +24,7 @@ def _run(script: str) -> str:
 def test_sharded_spmv_matches_dense():
     print(_run("""
         import numpy as np, jax, jax.numpy as jnp
+        from repro.compat import set_mesh
         from repro.core.spmv import make_sharded_spmv, partition_edges_by_dst, spmv_float
         from repro.graphs import erdos_renyi
         g = erdos_renyi(512, 4096, seed=0)
@@ -33,7 +34,7 @@ def test_sharded_spmv_matches_dense():
         p = (rng.random((512, k)) / 512).astype(np.float32)
         x, y, v = partition_edges_by_dst(g.x, g.y, g.val, 512, 8)
         f = make_sharded_spmv(mesh, "model", 512)
-        with jax.set_mesh(mesh):
+        with set_mesh(mesh):
             out = f(jnp.asarray(x), jnp.asarray(y), jnp.asarray(v), jnp.asarray(p))
         ref = spmv_float(jnp.asarray(g.x), jnp.asarray(g.y), jnp.asarray(g.val),
                          jnp.asarray(p), 512)
@@ -47,13 +48,14 @@ def test_compressed_psum_error_feedback():
     print(_run("""
         import numpy as np, jax, jax.numpy as jnp
         from jax.sharding import PartitionSpec as P
+        from repro.compat import shard_map
         from repro.distributed.collectives import compressed_psum
         mesh = jax.make_mesh((8,), ("data",))
         rng = np.random.default_rng(0)
         g = rng.standard_normal((8, 64)).astype(np.float32) * 0.1
         def step(gs, rs):
             return compressed_psum(gs, rs, "data", frac_bits=8)
-        f = jax.jit(jax.shard_map(step, mesh=mesh,
+        f = jax.jit(shard_map(step, mesh=mesh,
                     in_specs=(P("data"), P("data")), out_specs=(P("data"), P("data"))))
         r = jnp.zeros_like(jnp.asarray(g))
         red, r2 = f(jnp.asarray(g), r)
@@ -107,7 +109,8 @@ def test_small_mesh_train_and_decode_lowering():
         bshard = batch_shardings(batch_s, mesh)
         c = jax.jit(step, in_shardings=(state_shard, bshard),
                     out_shardings=(state_shard, None)).lower(state_s, batch_s).compile()
-        print("train compile OK; flops:", c.cost_analysis().get("flops"))
+        from repro.compat import compiled_cost_analysis
+        print("train compile OK; flops:", compiled_cost_analysis(c).get("flops"))
         # decode
         shape_d = ShapeConfig("d", "decode", 64, 8)
         token_s, pos_s, cache_s = S.decode_specs(cfg, shape_d, api)
@@ -176,9 +179,14 @@ def test_elastic_rescale_checkpoint():
         ckpt = tempfile.mkdtemp()
         save(ckpt, 3, state)
 
-        # "pod failure": restart on a 2x2 mesh, reshard on restore
+        # "pod failure": restart on a 2x2 mesh, reshard on restore.  A restart
+        # rebuilds the train step — reusing the old `step` function object
+        # would hit jax's trace cache, whose jaxpr bakes in mesh_big's
+        # sharding constraints.
         mesh_small = jax.make_mesh((2, 2), ("data", "model"))
         set_sharding_context(mesh_small)
+        step = make_train_step(api.loss_fn,
+                               AdamWConfig(lr=1e-3, warmup_steps=1, total_steps=20))
         psh2 = param_shardings(params, mesh_small, cfg=cfg)
         like = init_train_state(api.init_params(jax.random.PRNGKey(1)))
         st2 = restore(ckpt, 3, like)

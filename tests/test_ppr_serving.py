@@ -1,0 +1,361 @@
+"""PPR query-serving subsystem: scheduler waves, top-K vs argsort oracle,
+LRU cache, edge-partition tail fix, and the end-to-end PPRService."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import PPRConfig, format_for_bits, run_ppr
+from repro.core.metrics import topk_indices
+from repro.core.spmv import partition_edges_by_dst
+from repro.graphs import erdos_renyi, holme_kim_powerlaw
+from repro.ppr_serving import (
+    LRUCache,
+    PPRQuery,
+    PPRService,
+    WaveScheduler,
+    topk_dense,
+    topk_streaming,
+)
+
+
+@pytest.fixture(scope="module")
+def graph():
+    return holme_kim_powerlaw(600, m=5, seed=2)
+
+
+def oracle_topk(scores: np.ndarray, k: int, exclude: int) -> np.ndarray:
+    """Dense-rank argsort oracle with self-exclusion (metrics.topk_indices)."""
+    s = np.asarray(scores, np.float64).copy()
+    s[exclude] = -np.inf
+    return topk_indices(s, k)
+
+
+# ---------------------------------------------------------------------------
+# scheduler: wave formation
+# ---------------------------------------------------------------------------
+class FakeClock:
+    def __init__(self):
+        self.t = 0.0
+
+    def __call__(self):
+        return self.t
+
+
+def test_scheduler_full_wave_launches_immediately():
+    clk = FakeClock()
+    sch = WaveScheduler(kappa=4, max_wait=10.0, time_fn=clk)
+    for i in range(9):
+        sch.submit("key", i)
+    waves = sch.ready_waves()
+    assert [len(w) for w in waves] == [4, 4]
+    assert all(w.full for w in waves)
+    assert waves[0].items == [0, 1, 2, 3] and waves[1].items == [4, 5, 6, 7]
+    assert sch.pending() == 1              # partial held back inside max_wait
+
+
+def test_scheduler_deadline_flushes_partial_wave():
+    clk = FakeClock()
+    sch = WaveScheduler(kappa=4, max_wait=1.0, time_fn=clk)
+    sch.submit("key", "a")
+    clk.t = 0.5
+    assert sch.ready_waves() == []          # oldest has waited only 0.5 < 1.0
+    clk.t = 1.0
+    waves = sch.ready_waves()
+    assert len(waves) == 1 and not waves[0].full and waves[0].items == ["a"]
+    assert sch.pending() == 0
+
+
+def test_scheduler_query_deadline_tighter_than_max_wait():
+    clk = FakeClock()
+    sch = WaveScheduler(kappa=4, max_wait=10.0, time_fn=clk)
+    sch.submit("key", "urgent", deadline=0.2)
+    clk.t = 0.25
+    waves = sch.ready_waves()
+    assert len(waves) == 1 and waves[0].items == ["urgent"]
+
+
+def test_scheduler_late_tight_deadline_flushes_whole_partial():
+    """A newer occupant's tighter deadline governs — it must not wait on the
+    oldest occupant's looser budget, and the partial flush takes everyone."""
+    clk = FakeClock()
+    sch = WaveScheduler(kappa=4, max_wait=10.0, time_fn=clk)
+    sch.submit("key", "patient")
+    clk.t = 0.1
+    sch.submit("key", "urgent", deadline=0.2)
+    clk.t = 0.25
+    assert sch.ready_waves() == []          # urgent's budget ends at 0.3
+    clk.t = 0.35
+    waves = sch.ready_waves()
+    assert len(waves) == 1 and waves[0].items == ["patient", "urgent"]
+
+
+def test_scheduler_keys_do_not_mix():
+    """Queries on different (graph, precision) streams never share a wave."""
+    clk = FakeClock()
+    sch = WaveScheduler(kappa=2, max_wait=10.0, time_fn=clk)
+    sch.submit(("g1", "f32"), 1)
+    sch.submit(("g2", "f32"), 2)
+    sch.submit(("g1", "Q1.25"), 3)
+    assert sch.ready_waves() == []          # three singleton queues, none full
+    sch.submit(("g1", "f32"), 4)
+    waves = sch.ready_waves()
+    assert len(waves) == 1 and waves[0].key == ("g1", "f32")
+    assert waves[0].items == [1, 4]
+
+
+def test_scheduler_drain_chunks_by_kappa():
+    sch = WaveScheduler(kappa=4, max_wait=10.0, time_fn=FakeClock())
+    for i in range(6):
+        sch.submit("key", i)
+    waves = sch.drain()
+    assert [len(w) for w in waves] == [4, 2]
+    assert [w.full for w in waves] == [True, False]
+    assert sch.pending() == 0
+
+
+# ---------------------------------------------------------------------------
+# top-K: dense and streaming vs the numpy argsort oracle
+# ---------------------------------------------------------------------------
+def test_topk_float_matches_oracle_with_ties():
+    rng = np.random.default_rng(0)
+    # coarse grid forces plenty of score ties → exercises tie-breaking
+    P = (rng.integers(0, 20, (300, 5)) / 20.0).astype(np.float32)
+    idx, vals = topk_dense(jnp.asarray(P), 7)
+    for j in range(5):
+        want = topk_indices(P[:, j], 7)
+        np.testing.assert_array_equal(np.asarray(idx)[j], want)
+        np.testing.assert_array_equal(np.asarray(vals)[j], P[want, j])
+
+
+def test_topk_raw_uint32_matches_oracle():
+    rng = np.random.default_rng(1)
+    P = rng.integers(0, 50, (257, 4)).astype(np.uint32)   # many ties, odd V
+    idx, vals = topk_dense(jnp.asarray(P), 9)
+    for j in range(4):
+        np.testing.assert_array_equal(np.asarray(idx)[j],
+                                      topk_indices(P[:, j].astype(np.int64), 9))
+
+
+def test_topk_excludes_query_vertex():
+    P = np.zeros((40, 2), np.float32)
+    P[[3, 5, 7], 0] = [0.9, 0.8, 0.7]
+    P[[3, 5, 7], 1] = [0.9, 0.8, 0.7]
+    idx, _ = topk_dense(jnp.asarray(P), 2, exclude=jnp.asarray([3, 9]))
+    np.testing.assert_array_equal(np.asarray(idx), [[5, 7], [3, 5]])
+
+
+def test_topk_exclusion_zero_score_column_raw_domain():
+    """An excluded vertex must never re-enter via zero-score ties (the raw
+    domain has no -inf, so exclusion is by deletion, not masking)."""
+    P = np.zeros((30, 1), np.uint32)
+    P[[2, 4], 0] = [100, 50]                 # only two nonzero ranks
+    idx, _ = topk_dense(jnp.asarray(P), 5, exclude=jnp.asarray([0]))
+    got = np.asarray(idx)[0]
+    assert 0 not in got.tolist()
+    np.testing.assert_array_equal(got[:2], [2, 4])
+    np.testing.assert_array_equal(got[2:], [1, 3, 5])   # zero ties by ascending id
+
+
+@pytest.mark.parametrize("v,v_tile", [(256, 64), (300, 64), (100, 128), (257, 17)])
+@pytest.mark.parametrize("dtype", [np.float32, np.uint32])
+def test_topk_streaming_matches_dense(v, v_tile, dtype):
+    rng = np.random.default_rng(v)
+    if dtype == np.uint32:
+        P = rng.integers(0, 30, (v, 3)).astype(dtype)     # heavy ties
+    else:
+        P = (rng.integers(0, 30, (v, 3)) / 30.0).astype(dtype)
+    excl = jnp.asarray(rng.integers(0, v, 3), jnp.int32)
+    for exclude in (None, excl):
+        di, dv = topk_dense(jnp.asarray(P), 8, exclude=exclude)
+        si, sv = topk_streaming(jnp.asarray(P), 8, v_tile=v_tile, exclude=exclude)
+        np.testing.assert_array_equal(np.asarray(di), np.asarray(si))
+        np.testing.assert_array_equal(np.asarray(dv), np.asarray(sv))
+
+
+def test_topk_streaming_rejects_small_tile():
+    with pytest.raises(ValueError):
+        topk_streaming(jnp.zeros((64, 2), jnp.float32), 10, v_tile=8)
+
+
+# ---------------------------------------------------------------------------
+# LRU result cache
+# ---------------------------------------------------------------------------
+def test_lru_eviction_order_and_counters():
+    c = LRUCache(capacity=2)
+    c.put("a", 1)
+    c.put("b", 2)
+    assert c.get("a") == 1                  # refreshes "a" → "b" now oldest
+    c.put("c", 3)                           # evicts "b"
+    assert c.get("b") is None
+    assert c.get("a") == 1 and c.get("c") == 3
+    assert c.hits == 3 and c.misses == 1 and c.evictions == 1
+    assert c.hit_rate == 0.75
+    assert len(c) == 2 and "a" in c and "b" not in c
+
+
+def test_lru_zero_capacity_never_stores():
+    c = LRUCache(capacity=0)
+    c.put("a", 1)
+    assert c.get("a") is None and len(c) == 0
+
+
+# ---------------------------------------------------------------------------
+# satellite fix: partition_edges_by_dst must not drop tail edges
+# ---------------------------------------------------------------------------
+def test_partition_edges_tail_not_dropped():
+    g = erdos_renyi(510, 4000, seed=3)      # 510 % 4 != 0
+    n_shards = 4
+    X, Y, V = partition_edges_by_dst(g.x, g.y, g.val, 510, n_shards, packet=8)
+    assert (V > 0).sum() == g.num_edges     # every real edge survives
+    # reconstruct the full SpMV from the shard-local layout
+    v_local = -(-510 // n_shards)
+    k = 3
+    rng = np.random.default_rng(0)
+    p = (rng.random((510, k)) / 510).astype(np.float32)
+    out = np.zeros((n_shards * v_local, k), np.float32)
+    e_per = X.shape[0] // n_shards
+    for s in range(n_shards):
+        xs = X[s * e_per:(s + 1) * e_per]
+        ys = Y[s * e_per:(s + 1) * e_per]
+        vs = V[s * e_per:(s + 1) * e_per]
+        np.add.at(out[s * v_local:(s + 1) * v_local], xs, vs[:, None] * p[ys])
+    ref = np.zeros((510, k), np.float32)
+    np.add.at(ref, g.x, g.val[:, None] * p[g.y])
+    np.testing.assert_allclose(out[:510], ref, atol=1e-5)
+
+
+def test_partition_edges_divisible_unchanged():
+    g = erdos_renyi(512, 2000, seed=4)
+    X, Y, V = partition_edges_by_dst(g.x, g.y, g.val, 512, 8)
+    assert (V > 0).sum() == g.num_edges
+
+
+# ---------------------------------------------------------------------------
+# end-to-end PPRService
+# ---------------------------------------------------------------------------
+def per_vertex_oracle(g, v, k, fmt=None, iterations=10):
+    scores, _ = run_ppr(g, np.array([v]), PPRConfig(iterations=iterations), fmt=fmt)
+    return oracle_topk(scores[:, 0], k, v)
+
+
+def test_service_end_to_end(graph):
+    """Acceptance: ≥32 queries through κ-batched waves, float and fixed, top-10
+    matching the dense-rank argsort oracle, cache hits on repeat traffic."""
+    svc = PPRService(kappa=8, iterations=10, cache_capacity=256)
+    svc.register_graph("amz", graph, formats=[26])
+    rng = np.random.default_rng(0)
+    verts = rng.integers(0, graph.num_vertices, 16)
+    queries = [PPRQuery("amz", int(v), k=10) for v in verts] + \
+              [PPRQuery("amz", int(v), k=10, precision=26) for v in verts]
+    recs = svc.serve(queries)
+
+    assert len(recs) == 32
+    assert all(r.source == "wave" for r in recs)
+    fmt26 = format_for_bits(26)
+    for i, v in enumerate(verts):
+        np.testing.assert_array_equal(
+            recs[i].vertices, per_vertex_oracle(graph, int(v), 10))
+        np.testing.assert_array_equal(
+            recs[16 + i].vertices, per_vertex_oracle(graph, int(v), 10, fmt26))
+        assert int(v) not in recs[i].vertices.tolist()
+        # ranked scores are descending and self-free
+        assert (np.diff(recs[i].scores) <= 0).all()
+
+    s = svc.telemetry_summary()
+    assert s["queries_served"] == 32
+    assert s["waves"] == 4                   # 2 precision groups × 16/κ
+    assert s["mean_occupancy"] == 1.0
+
+    # repeat traffic → pure cache hits, hit rate > 0
+    again = svc.serve(queries[:8])
+    assert all(r.source == "cache" for r in again)
+    for i in range(8):
+        np.testing.assert_array_equal(again[i].vertices, recs[i].vertices)
+    assert svc.telemetry_summary()["cache_hit_rate"] > 0
+
+
+def test_service_partial_wave_results_correct(graph):
+    """3 queries on a κ=8 service: the drain path flushes a partial wave whose
+    pad columns must not leak into results."""
+    svc = PPRService(kappa=8, iterations=10)
+    svc.register_graph("g", graph)
+    verts = [7, 100, 201]
+    recs = svc.serve([PPRQuery("g", v, k=5) for v in verts])
+    assert len(recs) == 3
+    for r, v in zip(recs, verts):
+        np.testing.assert_array_equal(r.vertices, per_vertex_oracle(graph, v, 5))
+    assert svc.telemetry.wave_occupancies == [3 / 8]
+
+
+def test_service_streaming_topk_path(graph):
+    """topk_tile switches top-K to the padded-tile streaming merge."""
+    svc = PPRService(kappa=4, iterations=10, topk_tile=128)
+    svc.register_graph("g", graph, formats=[20])
+    verts = [11, 22, 33, 44]
+    recs = svc.serve([PPRQuery("g", v, k=10, precision=20) for v in verts])
+    fmt = format_for_bits(20)
+    for r, v in zip(recs, verts):
+        np.testing.assert_array_equal(r.vertices, per_vertex_oracle(graph, v, 10, fmt))
+
+
+def test_service_deadline_flush_via_pump(graph):
+    """A lone query launches only once its admission budget expires."""
+    clk = FakeClock()
+    svc = PPRService(kappa=8, iterations=5, max_wait=1.0, time_fn=clk)
+    svc.register_graph("g", graph)
+    assert svc.submit(PPRQuery("g", 42, k=5)) is None
+    assert svc.pump() == []                  # budget not yet spent
+    clk.t = 1.5
+    recs = svc.pump()
+    assert len(recs) == 1 and recs[0].source == "wave"
+    np.testing.assert_array_equal(
+        recs[0].vertices, per_vertex_oracle(graph, 42, 5, iterations=5))
+
+
+def test_service_serve_with_stale_submitted_query(graph):
+    """A query queued via submit() before serve() rides along without crashing
+    serve() or leaking into its results; its result lands in the cache."""
+    svc = PPRService(kappa=4, iterations=5)
+    svc.register_graph("g", graph)
+    stale = PPRQuery("g", 250, k=5)
+    assert svc.submit(stale) is None
+    verts = [1, 2, 3, 4]
+    recs = svc.serve([PPRQuery("g", v, k=5) for v in verts])
+    assert [r.query.vertex for r in recs] == verts
+    assert svc.submit(stale).source == "cache"   # stale query was computed
+
+
+def test_service_cache_immune_to_caller_mutation(graph):
+    """Mutating a returned Recommendation must not poison later cache hits."""
+    svc = PPRService(kappa=2, iterations=5)
+    svc.register_graph("g", graph)
+    q = PPRQuery("g", 50, k=5)
+    first = svc.serve([q])[0]
+    want = first.vertices.copy()
+    first.vertices[:] = -1
+    first.scores[:] = 0.0
+    again = svc.serve([PPRQuery("g", 50, k=5)])[0]
+    assert again.source == "cache"
+    np.testing.assert_array_equal(again.vertices, want)
+
+
+def test_service_rejects_unknown_graph_and_bad_vertex(graph):
+    svc = PPRService()
+    with pytest.raises(KeyError):
+        svc.submit(PPRQuery("nope", 0))
+    svc.register_graph("g", graph)
+    with pytest.raises(ValueError):
+        svc.submit(PPRQuery("g", graph.num_vertices))
+
+
+def test_service_mixed_graphs(graph):
+    g2 = erdos_renyi(400, 2400, seed=9)
+    svc = PPRService(kappa=2, iterations=8)
+    svc.register_graph("a", graph)
+    svc.register_graph("b", g2)
+    qs = [PPRQuery("a", 5), PPRQuery("b", 5), PPRQuery("a", 6), PPRQuery("b", 6)]
+    recs = svc.serve(qs)
+    np.testing.assert_array_equal(
+        recs[1].vertices, oracle_topk(
+            run_ppr(g2, np.array([5]), PPRConfig(iterations=8))[0][:, 0], 10, 5))
+    assert [r.query.graph for r in recs] == ["a", "b", "a", "b"]
