@@ -1,0 +1,141 @@
+"""Adaptive-precision sweep: quality-targeted autotuning vs static formats.
+
+For each quality target the service serves ``precision="auto"`` traffic through
+the closed loop (repro.autotune): the controller picks the Q format, waves
+early-exit at the fixed-point absorbing state/cycle (paper Fig. 7), and the
+shadow estimator reports the NDCG actually achieved against the float32
+reference.  Static rows serve the same traffic at the paper's fixed formats
+with the fixed 10-iteration baseline budget (the repo's pre-autotune
+behaviour) for comparison.
+
+Reported per row: achieved NDCG (shadow estimate), mean iterations per wave,
+early-exit iterations saved vs running the full budget, and queries/s.
+
+    PYTHONPATH=src python benchmarks/bench_autotune.py [--scale 0.02] [--dry-run]
+
+``--dry-run`` runs one tiny graph / one target in seconds — the CI smoke path
+(scripts/ci.sh).  Output is the house ``name,us_per_call,derived`` CSV.
+"""
+from __future__ import annotations
+
+import argparse
+from typing import Dict, List
+
+import numpy as np
+
+from repro.autotune import AutotuneConfig, ShadowConfig
+from repro.core import PPRConfig, format_for_bits, run_ppr
+from repro.core.metrics import ndcg, ranking
+from repro.graphs import holme_kim_powerlaw
+from repro.ppr_serving import PPRQuery, PPRService
+
+BASELINE_ITERATIONS = 10          # paper §5.1: the fixed budget the repo used
+STATIC_PRECISIONS = (None, 26, 20)
+TARGETS = (0.90, 0.95, 0.99)
+
+
+def _precision_label(p) -> str:
+    return "f32" if p is None else f"q{p}"
+
+
+def _offline_ndcg(g, prec, vertices, iterations) -> float:
+    """Mean full-vector NDCG vs the float32 reference for a few vertices."""
+    pers = np.asarray(vertices)
+    ref, _ = run_ppr(g, pers, PPRConfig(iterations=iterations))
+    if prec is None:
+        return 1.0
+    got, _ = run_ppr(g, pers, PPRConfig(iterations=iterations),
+                     fmt=format_for_bits(prec))
+    scores = []
+    for i in range(len(pers)):
+        r = ref[:, i]
+        scores.append(ndcg(got[:, i], r, 50, ref_order=ranking(r)))
+    return float(np.mean(scores))
+
+
+def run(scale: float = 0.02, n_queries: int = 48, kappa: int = 8,
+        budget: int = 120, targets=TARGETS, ladder=(20, 22, 24, 26),
+        sample_fraction: float = 0.5, seed: int = 0) -> List[Dict]:
+    g = holme_kim_powerlaw(max(128, int(128000 * scale)), m=3, seed=1)
+    rng = np.random.default_rng(seed)
+    users = rng.integers(0, g.num_vertices, n_queries)
+    eval_verts = users[:4]
+    rows: List[Dict] = []
+
+    # -- static formats at the fixed 10-iteration baseline (pre-autotune repo)
+    for prec in STATIC_PRECISIONS:
+        svc = PPRService(kappa=kappa, iterations=BASELINE_ITERATIONS,
+                         cache_capacity=0)
+        svc.register_graph("g", g, formats=[p for p in (prec,) if p])
+        svc.serve([PPRQuery("g", int(v), k=10, precision=prec)
+                   for v in users])
+        s = svc.telemetry_summary()
+        rows.append({
+            "mode": "static", "precision": _precision_label(prec),
+            "target": None, "V": g.num_vertices, "E": g.num_edges,
+            "achieved_ndcg": _offline_ndcg(g, prec, eval_verts,
+                                           BASELINE_ITERATIONS),
+            "mean_wave_iters": float(BASELINE_ITERATIONS),
+            "iterations_saved": 0, "budget": BASELINE_ITERATIONS,
+            "queries_per_s": s["queries_per_s"],
+            "shadow_evaluations": 0,
+        })
+
+    # -- adaptive precision: quality-target sweep with early exit
+    for target in targets:
+        cfg = AutotuneConfig(
+            ladder=tuple(ladder),
+            shadow=ShadowConfig(sample_fraction=sample_fraction,
+                                min_samples=2, window=16, seed=seed))
+        svc = PPRService(kappa=kappa, iterations=budget, early_exit=True,
+                         autotune=cfg, cache_capacity=0)
+        svc.register_graph("g", g)
+        svc.serve([PPRQuery("g", int(v), k=10, precision="auto",
+                            quality_target=target) for v in users])
+        s = svc.telemetry_summary()
+        waves = max(1, int(s["waves"]))
+        served = {k[len("served_"):]: v for k, v in s.items()
+                  if k.startswith("served_")}
+        rows.append({
+            "mode": "auto", "precision": "+".join(sorted(served)),
+            "target": target, "V": g.num_vertices, "E": g.num_edges,
+            "achieved_ndcg": s["shadow_quality_mean"],
+            "mean_wave_iters": float(budget) - s["iterations_saved"] / waves,
+            "iterations_saved": int(s["iterations_saved"]),
+            "budget": budget,
+            "queries_per_s": s["queries_per_s"],
+            "shadow_evaluations": int(s["shadow_evaluations"]),
+            "served": served,
+        })
+    return rows
+
+
+def main(scale: float = 0.02, dry_run: bool = False):
+    if dry_run:
+        rows = run(scale=0.005, n_queries=8, kappa=4, budget=80,
+                   targets=(0.95,), ladder=(16, 20), sample_fraction=1.0)
+    else:
+        rows = run(scale=scale)
+    print("# autotune: name,us_per_call,derived")
+    for r in rows:
+        name = f"autotune_{r['mode']}" + \
+            (f"_t{r['target']}" if r["target"] is not None
+             else f"_{r['precision']}")
+        us = 1e6 / r["queries_per_s"] if r["queries_per_s"] else 0.0
+        print(f"{name},{us:.0f},"
+              f"ndcg={r['achieved_ndcg']:.5f};"
+              f"wave_iters={r['mean_wave_iters']:.1f};"
+              f"saved_vs_budget{r['budget']}={r['iterations_saved']};"
+              f"baseline_iters={BASELINE_ITERATIONS};"
+              f"qps={r['queries_per_s']:.1f};"
+              f"served={r['precision']}")
+    return rows
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--scale", type=float, default=0.02)
+    ap.add_argument("--dry-run", action="store_true",
+                    help="tiny graph, one target — the CI smoke path")
+    args = ap.parse_args()
+    main(scale=args.scale, dry_run=args.dry_run)

@@ -1,39 +1,86 @@
 """Benchmark harness — one function per paper table/figure.
 
-    PYTHONPATH=src python -m benchmarks.run [--scale 0.02] [--full]
+    PYTHONPATH=src python -m benchmarks.run [--scale 0.02] [--full] [--json DIR]
 
 Prints ``name,us_per_call,derived`` CSV per row.  --full uses the paper's
 graph sizes (|V| = 1e5/2e5, |E| ≈ 1e6/2e6 — minutes on CPU); default scale
 runs in ~2 minutes.
+
+``--json DIR`` additionally writes one machine-readable ``BENCH_<section>.json``
+per section ({"bench", "scale", "rows": [...]}) so the perf trajectory can be
+tracked across commits without re-parsing the human CSV.
 """
 from __future__ import annotations
 
 import argparse
+import json
+import os
+from typing import Any
 
-from benchmarks import (bench_accuracy, bench_convergence, bench_ppr,
-                        bench_serving_ppr, bench_spmv)
+import numpy as np
+
+from benchmarks import (bench_accuracy, bench_autotune, bench_convergence,
+                        bench_ppr, bench_serving_ppr, bench_spmv)
 from benchmarks import roofline_report
+
+
+def _jsonable(o: Any):
+    """JSON encoder default for the numpy scalars/arrays bench rows carry."""
+    if isinstance(o, np.integer):
+        return int(o)
+    if isinstance(o, np.floating):
+        return float(o)
+    if isinstance(o, np.ndarray):
+        return o.tolist()
+    return str(o)
+
+
+def _dump(json_dir: str, section: str, scale: float, rows) -> None:
+    path = os.path.join(json_dir, f"BENCH_{section}.json")
+    with open(path, "w") as f:
+        json.dump({"bench": section, "scale": scale, "rows": rows or []},
+                  f, indent=1, default=_jsonable)
+    print(f"[json] wrote {path}")
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--scale", type=float, default=0.02)
     ap.add_argument("--full", action="store_true", help="paper-size graphs")
+    ap.add_argument("--json", metavar="DIR", nargs="?", const=".", default=None,
+                    help="also write BENCH_<section>.json rows into DIR")
     args = ap.parse_args()
     scale = 1.0 if args.full else args.scale
+    if args.json:
+        os.makedirs(args.json, exist_ok=True)
 
-    print("## bench_ppr (paper Fig. 3: speedup vs bit-width x 8 graphs)")
-    bench_ppr.main(scale=scale)
-    print("\n## bench_accuracy (paper Figs. 4/5/6: accuracy vs bit-width)")
-    bench_accuracy.main(scale=scale)
-    print("\n## bench_convergence (paper Fig. 7: fixed vs float convergence)")
-    bench_convergence.main(scale=scale)
-    print("\n## bench_spmv (paper Table 2 analogue: kernel characterization)")
-    bench_spmv.main(scale=scale)
-    print("\n## bench_serving_ppr (PPRService: queries/s, p50/p95 vs kappa x precision)")
-    bench_serving_ppr.main(scale=scale)
-    print("\n## roofline (dry-run artifacts; EXPERIMENTS.md section Roofline)")
-    roofline_report.main()
+    sections = [
+        ("ppr", "bench_ppr (paper Fig. 3: speedup vs bit-width x 8 graphs)",
+         lambda: bench_ppr.main(scale=scale)),
+        ("accuracy", "bench_accuracy (paper Figs. 4/5/6: accuracy vs bit-width)",
+         lambda: bench_accuracy.main(scale=scale)),
+        ("convergence", "bench_convergence (paper Fig. 7: fixed vs float convergence)",
+         lambda: bench_convergence.main(scale=scale)),
+        ("spmv", "bench_spmv (paper Table 2 analogue: kernel characterization)",
+         lambda: bench_spmv.main(scale=scale)),
+        ("serving_ppr", "bench_serving_ppr (PPRService: queries/s, p50/p95 vs kappa x precision)",
+         lambda: bench_serving_ppr.main(scale=scale)),
+        ("autotune", "bench_autotune (adaptive precision: quality targets vs static formats)",
+         lambda: bench_autotune.main(scale=scale)),
+        ("roofline", "roofline (dry-run artifacts; EXPERIMENTS.md section Roofline)",
+         lambda: roofline_report.main()),
+    ]
+    for i, (section, title, fn) in enumerate(sections):
+        print(("\n" if i else "") + f"## {title}")
+        try:
+            rows = fn()
+        except FileNotFoundError as e:
+            # roofline reads pre-generated experiments/roofline artifacts;
+            # their absence must not sink the rest of a --json run
+            print(f"[skip] {section}: {e}")
+            continue
+        if args.json:
+            _dump(args.json, section, scale, rows)
 
 
 if __name__ == "__main__":

@@ -56,3 +56,22 @@ again = service.serve(repeat)
 s = service.telemetry_summary()
 print(f"\nrepeat traffic: {sum(r.source == 'cache' for r in again)}/20 served "
       f"from cache (service hit rate {s['cache_hit_rate']:.2f})")
+
+# adaptive precision: ask for a quality target instead of a bit-width — the
+# autotune subsystem picks the cheapest Q format whose shadow-sampled NDCG
+# meets it, and early-exits waves at the fixed-point absorbing state
+from repro.autotune import AutotuneConfig, ShadowConfig
+
+auto_svc = PPRService(kappa=8, iterations=100, early_exit=True,
+                      autotune=AutotuneConfig(
+                          shadow=ShadowConfig(sample_fraction=0.5, seed=0)))
+auto_svc.register_graph("amazon", g)
+auto_recs = auto_svc.serve([PPRQuery("amazon", int(v), k=10, precision="auto",
+                                     quality_target=0.95)
+                            for v in users[:32]])
+s = auto_svc.telemetry_summary()
+served = {r.precision for r in auto_recs}
+print(f"\nauto precision (NDCG target 0.95): served at {sorted(served)}, "
+      f"shadow NDCG {s['shadow_quality_mean']:.4f} over "
+      f"{s['shadow_evaluations']:.0f} samples, early exit saved "
+      f"{s['iterations_saved']:.0f} iterations across {s['waves']:.0f} waves")

@@ -10,3 +10,6 @@ python -m pytest -x -q
 
 echo "== smoke: PPRService benchmark (dry run) =="
 python benchmarks/bench_serving_ppr.py --dry-run
+
+echo "== smoke: adaptive-precision benchmark (dry run) =="
+python benchmarks/bench_autotune.py --dry-run

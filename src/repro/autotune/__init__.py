@@ -1,0 +1,66 @@
+"""Adaptive-precision subsystem: quality-targeted Q-format autotuning.
+
+The paper's two headline empirical results are a *dial* and a *shortcut*:
+
+- Figs. 4-6 (the dial): ranking fidelity (NDCG, precision@k, errors@N) degrades
+  gracefully and monotonically as the fixed-point width shrinks from Q1.25 to
+  Q1.19, with the exact curve depending on graph structure (Fig. 6's sparsity
+  sweep).
+- Fig. 7 (the shortcut): fixed-point PPR reaches an *absorbing state* — an
+  iteration that changes nothing, every update underflowing the 2^-f grid — in
+  fewer iterations than float32 takes to converge past 1e-6.
+
+The repo's serving layer (repro.ppr_serving) previously exposed both results
+only as manual knobs: the operator picked a Q format per query and every wave
+ran a fixed iteration budget.  This package closes the loop:
+
+DESIGN — component ↔ paper figure map
+-------------------------------------
+``quality.py``      The online analogue of Figs. 4-6's offline measurement:
+                    shadow-samples a configurable fraction of served queries,
+                    re-runs their personalization column at float32, scores the
+                    served ranking with the paper's own metrics (core.metrics
+                    NDCG / precision@k), and keeps per-(graph, format)
+                    sliding-window estimates.  Seeded sampling keeps replays
+                    deterministic.
+``controller.py``   Walks Figs. 4-6's quality/bit-width curve as a per-graph
+                    policy ladder: ``precision="auto"`` resolves to the
+                    cheapest Q format whose window estimate meets the query's
+                    quality target, with a float32 fallback rung above the
+                    widest format.  Hysteresis (consecutive-window patience in
+                    both directions plus a promote margin) keeps one bad
+                    window from thrashing formats.
+``convergence.py``  Fig. 7 as a serving policy: per-wave delta monitoring on
+                    the step drivers (``ppr_step_float`` /
+                    ``make_ppr_fixed_step``) stops a fixed-point wave at the
+                    absorbing state (delta == 0, bit-identical to the full
+                    run) and a float wave below the paper's 1e-6 threshold,
+                    instead of always burning the full iteration budget.
+
+Integration: ``repro.ppr_serving.PPRService`` resolves ``precision="auto"``
+through the controller before wave admission (so auto queries batch with
+same-format explicit traffic), drives waves through the convergence monitor,
+feeds shadow scores back after each fixed-precision wave, and exports the
+shadow / early-exit / served-precision counters through ``ServiceTelemetry``.
+``benchmarks/bench_autotune.py`` sweeps quality targets against the static
+formats.
+"""
+from repro.autotune.controller import (
+    DEFAULT_LADDER,
+    AutotuneConfig,
+    PrecisionController,
+)
+from repro.autotune.convergence import (
+    ConvergenceMonitor,
+    ConvergencePolicy,
+    run_until_converged,
+    wave_delta,
+)
+from repro.autotune.quality import QualityEstimator, ShadowConfig, score_quality
+
+__all__ = [
+    "AutotuneConfig", "PrecisionController", "DEFAULT_LADDER",
+    "QualityEstimator", "ShadowConfig", "score_quality",
+    "ConvergencePolicy", "ConvergenceMonitor", "run_until_converged",
+    "wave_delta",
+]

@@ -11,32 +11,61 @@ converged reference ranking (the CPU float64 oracle).
 - precision@N   : |topN_approx ∩ topN_ref| / N (order-insensitive).
 - kendall_tau@N : pairwise order agreement on the reference top-N.
 - MAE           : mean |score_approx − score_ref| over all vertices.
+
+Every top-N metric accepts precomputed ``approx_order`` / ``ref_order`` full
+rankings (from :func:`ranking`) so hot-path callers — ``full_report`` itself and
+the serving-side shadow quality estimator (repro.autotune.quality), which scores
+a sampled fraction of *all served queries* — sort each score vector once instead
+of once per metric.  N larger than |V| is clamped to |V| everywhere.
+
+``kendall_tau`` uses scipy when available and falls back to a pure-numpy τ-b
+(O(N²) pairwise, fine for top-N sizes) so a scipy-less environment never loses
+``full_report``.
 """
 from __future__ import annotations
 
-from typing import Sequence
+from typing import Optional, Sequence
 
 import numpy as np
 
+try:  # scipy is optional: the tier-1 env may not ship it
+    from scipy.stats import kendalltau as _scipy_kendalltau
+except Exception:  # pragma: no cover - exercised only in scipy-less envs
+    _scipy_kendalltau = None
 
-def topk_indices(scores: np.ndarray, k: int) -> np.ndarray:
-    """Indices of the k largest scores, ties broken by vertex id (deterministic)."""
+
+def ranking(scores: np.ndarray) -> np.ndarray:
+    """Full deterministic ranking: indices by descending score, ties broken by
+    ascending vertex id.  ``topk_indices(s, k) == ranking(s)[:k]``."""
     scores = np.asarray(scores)
     # argsort on (-score, idx): stable deterministic ranking
-    order = np.lexsort((np.arange(scores.shape[0]), -scores))
-    return order[:k]
+    return np.lexsort((np.arange(scores.shape[0]), -scores))
 
 
-def num_errors(approx: np.ndarray, ref: np.ndarray, n: int) -> int:
-    ta = topk_indices(approx, n)
-    tr = topk_indices(ref, n)
+def topk_indices(scores: np.ndarray, k: int) -> np.ndarray:
+    """Indices of the k largest scores, ties broken by vertex id (deterministic).
+    k beyond |V| returns all |V| indices."""
+    return ranking(scores)[:k]
+
+
+def _order(scores: np.ndarray, precomputed: Optional[np.ndarray]) -> np.ndarray:
+    return ranking(scores) if precomputed is None else np.asarray(precomputed)
+
+
+def num_errors(approx: np.ndarray, ref: np.ndarray, n: int, *,
+               approx_order: Optional[np.ndarray] = None,
+               ref_order: Optional[np.ndarray] = None) -> int:
+    ta = _order(approx, approx_order)[:n]
+    tr = _order(ref, ref_order)[:n]
     return int((ta != tr).sum())
 
 
-def edit_distance(approx: np.ndarray, ref: np.ndarray, n: int) -> int:
+def edit_distance(approx: np.ndarray, ref: np.ndarray, n: int, *,
+                  approx_order: Optional[np.ndarray] = None,
+                  ref_order: Optional[np.ndarray] = None) -> int:
     """Levenshtein distance between the two top-N vertex sequences."""
-    a = topk_indices(approx, n).tolist()
-    b = topk_indices(ref, n).tolist()
+    a = _order(approx, approx_order)[:n].tolist()
+    b = _order(ref, ref_order)[:n].tolist()
     la, lb = len(a), len(b)
     prev = list(range(lb + 1))
     for i in range(1, la + 1):
@@ -48,33 +77,57 @@ def edit_distance(approx: np.ndarray, ref: np.ndarray, n: int) -> int:
     return int(prev[lb])
 
 
-def ndcg(approx: np.ndarray, ref: np.ndarray, n: int | None = None) -> float:
+def ndcg(approx: np.ndarray, ref: np.ndarray, n: int | None = None, *,
+         approx_order: Optional[np.ndarray] = None,
+         ref_order: Optional[np.ndarray] = None) -> float:
     """Paper's NDCG: rel of vertex = |V| − (its reference rank); DCG over the
     approx ordering; normalized by the reference (ideal) DCG."""
     v = ref.shape[0]
-    n = n or v
-    ref_order = topk_indices(ref, v)
+    n = min(n or v, v)
+    ref_order = _order(ref, ref_order)
     rel = np.empty(v, np.float64)
     rel[ref_order] = v - np.arange(v)          # rel_i = |V| - rank_i
-    approx_order = topk_indices(approx, n)
+    approx_top = _order(approx, approx_order)[:n]
     discounts = 1.0 / np.log2(np.arange(1, n + 1) + 1)
-    dcg = float((rel[approx_order] * discounts).sum())
+    dcg = float((rel[approx_top] * discounts).sum())
     idcg = float((rel[ref_order[:n]] * discounts).sum())
     return dcg / idcg if idcg > 0 else 1.0
 
 
-def precision_at(approx: np.ndarray, ref: np.ndarray, n: int) -> float:
-    ta = set(topk_indices(approx, n).tolist())
-    tr = set(topk_indices(ref, n).tolist())
-    return len(ta & tr) / float(n)
+def precision_at(approx: np.ndarray, ref: np.ndarray, n: int, *,
+                 approx_order: Optional[np.ndarray] = None,
+                 ref_order: Optional[np.ndarray] = None) -> float:
+    n = min(n, np.asarray(ref).shape[0])
+    ta = set(_order(approx, approx_order)[:n].tolist())
+    tr = set(_order(ref, ref_order)[:n].tolist())
+    return len(ta & tr) / float(n) if n else 1.0
 
 
-def kendall_tau(approx: np.ndarray, ref: np.ndarray, n: int) -> float:
+def _kendall_tau_b(x: np.ndarray, y: np.ndarray) -> float:
+    """Pure-numpy Kendall τ-b: (C − D) / √((n₀ − ties_x)(n₀ − ties_y)) over all
+    pairs.  O(N²) memory/time — intended for top-N slices, not full graphs."""
+    x = np.asarray(x, np.float64)
+    y = np.asarray(y, np.float64)
+    n = x.shape[0]
+    if n < 2:
+        return float("nan")
+    iu = np.triu_indices(n, 1)
+    dx = np.sign(x[:, None] - x[None, :])[iu]
+    dy = np.sign(y[:, None] - y[None, :])[iu]
+    num = float((dx * dy).sum())               # C − D (tied pairs contribute 0)
+    n0 = dx.shape[0]
+    denom = np.sqrt(float(n0 - (dx == 0).sum()) * float(n0 - (dy == 0).sum()))
+    return num / denom if denom > 0 else float("nan")
+
+
+def kendall_tau(approx: np.ndarray, ref: np.ndarray, n: int, *,
+                ref_order: Optional[np.ndarray] = None) -> float:
     """Kendall's τ-b restricted to the reference top-N vertices."""
-    import scipy.stats as st
-
-    idx = topk_indices(ref, n)
-    tau, _ = st.kendalltau(ref[idx], approx[idx])
+    idx = _order(ref, ref_order)[:n]
+    if _scipy_kendalltau is not None:
+        tau, _ = _scipy_kendalltau(ref[idx], approx[idx])
+    else:
+        tau = _kendall_tau_b(ref[idx], approx[idx])
     return float(tau) if np.isfinite(tau) else 1.0
 
 
@@ -83,14 +136,23 @@ def mae(approx: np.ndarray, ref: np.ndarray) -> float:
 
 
 def full_report(approx: np.ndarray, ref: np.ndarray,
-                ns: Sequence[int] = (10, 20, 50)) -> dict:
-    """All paper metrics for one (approx, ref) score-vector pair."""
-    rep = {"mae": mae(approx, ref), "ndcg": ndcg(approx, ref, max(ns))}
+                ns: Sequence[int] = (10, 20, 50), *,
+                ref_order: Optional[np.ndarray] = None) -> dict:
+    """All paper metrics for one (approx, ref) score-vector pair.
+
+    Both score vectors are ranked exactly once; pass ``ref_order=ranking(ref)``
+    when scoring many approximations against one fixed reference (the shadow
+    estimator's hot path) to skip even that sort.
+    """
+    approx_order = ranking(approx)
+    ref_order = _order(ref, ref_order)
+    kw = {"approx_order": approx_order, "ref_order": ref_order}
+    rep = {"mae": mae(approx, ref), "ndcg": ndcg(approx, ref, max(ns), **kw)}
     for n in ns:
-        rep[f"errors@{n}"] = num_errors(approx, ref, n)
-        rep[f"edit@{n}"] = edit_distance(approx, ref, n)
-        rep[f"precision@{n}"] = precision_at(approx, ref, n)
-        rep[f"kendall@{n}"] = kendall_tau(approx, ref, n)
+        rep[f"errors@{n}"] = num_errors(approx, ref, n, **kw)
+        rep[f"edit@{n}"] = edit_distance(approx, ref, n, **kw)
+        rep[f"precision@{n}"] = precision_at(approx, ref, n, **kw)
+        rep[f"kendall@{n}"] = kendall_tau(approx, ref, n, ref_order=ref_order)
     return rep
 
 

@@ -33,14 +33,20 @@ DESIGN — component ↔ paper section map
                   the serving analogues of the paper's Table 2 / Fig. 3
                   throughput accounting.
 
-Follow-ons this layer enables (ROADMAP open items): multi-host sharded
-serving (route waves to spmv_sharded meshes), precision auto-tuning (pick the
-cheapest format meeting a per-query NDCG target), async prefetch of hot
+The adaptive-precision subsystem (repro.autotune) plugs in here:
+``precision="auto"`` queries are resolved to the cheapest Q format meeting a
+per-query quality target before wave admission, waves early-exit at the
+fixed-point absorbing state (paper Fig. 7), and a sampled fraction of served
+auto queries is shadow-scored against a float32 reference to keep the
+controller honest.  Remaining follow-ons (ROADMAP open items): multi-host
+sharded serving (route waves to spmv_sharded meshes), async prefetch of hot
 personalization vertices into the cache.
 """
 from repro.ppr_serving.cache import LRUCache
 from repro.ppr_serving.scheduler import Wave, WaveScheduler
 from repro.ppr_serving.service import (
+    AUTO_KEY,
+    FLOAT_KEY,
     PPRQuery,
     PPRService,
     Recommendation,
@@ -53,7 +59,7 @@ from repro.ppr_serving.topk import topk_dense, topk_streaming
 
 __all__ = [
     "PPRService", "PPRQuery", "Recommendation", "RegisteredGraph",
-    "normalize_precision", "precision_key",
+    "normalize_precision", "precision_key", "AUTO_KEY", "FLOAT_KEY",
     "WaveScheduler", "Wave",
     "LRUCache", "ServiceTelemetry",
     "topk_dense", "topk_streaming",

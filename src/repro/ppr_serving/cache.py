@@ -8,7 +8,7 @@ cache).  Hit/miss/eviction counters feed the telemetry hit-rate.
 from __future__ import annotations
 
 from collections import OrderedDict
-from typing import Any, Dict, Hashable, Optional
+from typing import Any, Callable, Dict, Hashable, Optional
 
 
 class LRUCache:
@@ -22,6 +22,7 @@ class LRUCache:
         self.hits = 0
         self.misses = 0
         self.evictions = 0
+        self.invalidations = 0
 
     def __len__(self) -> int:
         return len(self._store)
@@ -48,6 +49,16 @@ class LRUCache:
             self._store.popitem(last=False)
             self.evictions += 1
 
+    def invalidate(self, predicate: Callable[[Hashable], bool]) -> int:
+        """Drop every entry whose key satisfies ``predicate``; returns the
+        count.  Used when a graph is re-registered under an existing name —
+        its cached ranks describe the *old* topology and must not survive."""
+        doomed = [k for k in self._store if predicate(k)]
+        for k in doomed:
+            del self._store[k]
+        self.invalidations += len(doomed)
+        return len(doomed)
+
     @property
     def hit_rate(self) -> float:
         total = self.hits + self.misses
@@ -60,5 +71,6 @@ class LRUCache:
             "hits": self.hits,
             "misses": self.misses,
             "evictions": self.evictions,
+            "invalidations": self.invalidations,
             "hit_rate": self.hit_rate,
         }

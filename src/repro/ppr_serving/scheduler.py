@@ -60,6 +60,16 @@ class WaveScheduler:
     def pending(self) -> int:
         return sum(len(q) for q in self._queues.values())
 
+    def purge(self, key_predicate) -> int:
+        """Drop every pending query whose wave key satisfies the predicate;
+        returns the number dropped.  Used when a graph is re-registered: its
+        queued queries were validated against the old topology (their vertices
+        may not even exist in the new one) and must not launch."""
+        dropped = 0
+        for key in [k for k in self._queues if key_predicate(k)]:
+            dropped += len(self._queues.pop(key))
+        return dropped
+
     # ------------------------------------------------------------------
     def ready_waves(self, now: Optional[float] = None) -> List[Wave]:
         """Pop every launchable wave: all full waves, plus partial waves in

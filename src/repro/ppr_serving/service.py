@@ -4,14 +4,25 @@ Lifecycle: graphs are registered once (host arrays moved to device, edge
 stream padded to packets, per-format quantized values cached), then queries
 flow through
 
-    submit → result cache probe → κ-batch scheduler → wave launch
-           → step-driven PPR iterations → streaming top-K → cache fill
+    submit → precision resolution ("auto" → controller) → result cache probe
+           → κ-batch scheduler → wave launch → step-driven PPR iterations
+           (early-exit on convergence) → streaming top-K → cache fill
+           → shadow quality feedback
 
 A wave shares one edge stream over up to κ personalization columns (the
 paper's κ-batching); each wave is driven one eq. (1) iteration at a time via
-``ppr_step_float`` / ``make_ppr_fixed_step`` so future work can abort or
-re-prioritize mid-flight.  Results are ranked ``Recommendation``s — the query
-vertex itself is always excluded from its own top-k.
+``ppr_step_float`` / ``make_ppr_fixed_step``, which is what lets the
+convergence monitor (repro.autotune.convergence, paper Fig. 7) stop a wave at
+the fixed-point absorbing state instead of burning the full budget.  Results
+are ranked ``Recommendation``s — the query vertex itself is always excluded
+from its own top-k.
+
+``precision="auto"`` queries are resolved to a concrete format *before wave
+admission* by the adaptive-precision controller (repro.autotune.controller),
+so auto traffic batches into the same waves as explicit same-format traffic.
+After a fixed-precision wave, a sampled fraction of its auto queries is
+shadow-scored against a float32 reference run to keep the controller's
+quality estimates current (paper Figs. 4-6 measured online).
 """
 from __future__ import annotations
 
@@ -22,12 +33,16 @@ from typing import Dict, List, Optional, Sequence, Tuple, Union
 import jax.numpy as jnp
 import numpy as np
 
+from repro.autotune.controller import AutotuneConfig, PrecisionController
+from repro.autotune.convergence import ConvergencePolicy, run_until_converged
 from repro.core.coo import COOGraph
 from repro.core.fixed_point import PAPER_FORMATS, QFormat, format_for_bits
+from repro.core.metrics import ranking
 from repro.core.ppr import (
     make_ppr_fixed_step,
     personalization_matrix,
     personalization_matrix_fixed,
+    ppr_float,
     ppr_step_float,
 )
 from repro.ppr_serving.cache import LRUCache
@@ -38,10 +53,17 @@ from repro.ppr_serving.topk import topk_dense, topk_streaming
 Precision = Union[None, int, str, QFormat]
 
 FLOAT_KEY = "f32"
+AUTO_KEY = "auto"
 
 
 def normalize_precision(precision: Precision) -> Optional[QFormat]:
-    """None/"f32" → float32 path; int bits / "Q1.f" / QFormat → fixed path."""
+    """None/"f32" → float32 path; int bits / "Q1.f" / QFormat → fixed path.
+
+    ``"auto"`` is *not* a concrete precision — the service resolves it through
+    the precision controller before anything needs a QFormat."""
+    if precision == AUTO_KEY:
+        raise ValueError('precision="auto" must be resolved by the service\'s '
+                         'precision controller before normalization')
     if precision is None or precision == FLOAT_KEY:
         return None
     if isinstance(precision, QFormat):
@@ -68,12 +90,18 @@ class PPRQuery:
 
     ``deadline`` bounds how long the query may wait in the admission queue for
     its wave to fill (seconds); it does not bound the iteration time itself.
+
+    ``precision="auto"`` asks the service's precision controller for the
+    cheapest Q format currently meeting ``quality_target`` (NDCG against the
+    float32 reference; the controller's default target when None).
+    ``quality_target`` is ignored for explicit precisions.
     """
     graph: str
     vertex: int
     k: int = 10
     precision: Precision = None
     deadline: Optional[float] = None
+    quality_target: Optional[float] = None
 
 
 @dataclasses.dataclass
@@ -84,6 +112,7 @@ class Recommendation:
     source: str                    # "wave" | "cache"
     wave_id: int = -1
     latency_s: float = 0.0
+    precision: str = ""            # resolved precision key ("f32" / "Q1.f")
 
 
 class RegisteredGraph:
@@ -106,7 +135,8 @@ class RegisteredGraph:
 
 
 class PPRService:
-    """Facade: named graphs, κ-batched admission, cached ranked results."""
+    """Facade: named graphs, κ-batched admission, cached ranked results,
+    adaptive precision (``precision="auto"``) and early-exit iterations."""
 
     def __init__(
         self,
@@ -116,6 +146,8 @@ class PPRService:
         max_wait: float = 0.0,
         cache_capacity: int = 4096,
         topk_tile: Optional[int] = None,
+        autotune: Optional[AutotuneConfig] = None,
+        early_exit: Union[None, bool, ConvergencePolicy] = None,
         time_fn=time.monotonic,
     ):
         self.kappa = kappa
@@ -126,6 +158,11 @@ class PPRService:
         self.scheduler = WaveScheduler(kappa, max_wait=max_wait, time_fn=time_fn)
         self.cache = LRUCache(cache_capacity)
         self.telemetry = ServiceTelemetry()
+        self.controller = PrecisionController(autotune or AutotuneConfig())
+        if early_exit is True:
+            self.convergence: Optional[ConvergencePolicy] = ConvergencePolicy()
+        else:
+            self.convergence = early_exit or None
         self._graphs: Dict[str, RegisteredGraph] = {}
         self._wave_counter = 0
 
@@ -133,7 +170,18 @@ class PPRService:
     def register_graph(self, name: str, g: COOGraph,
                        formats: Sequence[Precision] = (),
                        packet: int = 256) -> RegisteredGraph:
-        """Move a graph to the device; optionally pre-quantize for ``formats``."""
+        """Move a graph to the device; optionally pre-quantize for ``formats``.
+
+        Re-registering an existing name invalidates that graph's cached
+        results, drops its still-pending queries (they were validated against
+        the old topology — their vertices may be out of range in the new one,
+        which JAX's scatter would silently ignore, serving garbage), and
+        resets its quality estimates — nothing from the old topology may be
+        served or steer the precision ladder."""
+        if name in self._graphs:
+            self.cache.invalidate(lambda key: key[0] == name)
+            self.scheduler.purge(lambda key: key[0] == name)
+            self.controller.forget_graph(name)
         rg = RegisteredGraph(name, g, packet=packet)
         for p in formats:
             fmt = normalize_precision(p)
@@ -147,8 +195,21 @@ class PPRService:
         return tuple(self._graphs)
 
     # ------------------------------------------------------------------
-    def _cache_key(self, q: PPRQuery) -> Tuple:
-        return (q.graph, int(q.vertex), precision_key(q.precision), int(q.k))
+    def _resolve_precision(self, q: PPRQuery) -> str:
+        """Concrete precision key for a query; "auto" goes through the ladder."""
+        if q.precision == AUTO_KEY:
+            fmt = self.controller.resolve(q.graph, q.quality_target)
+            pkey = FLOAT_KEY if fmt is None else fmt.name
+            self.telemetry.record_auto_resolution(pkey)
+            return pkey
+        return precision_key(q.precision)
+
+    def _cache_key(self, q: PPRQuery, pkey: str) -> Tuple:
+        # resolved precision + iteration budget + early-exit mode: an
+        # auto-resolved or early-exited result must never alias an entry
+        # computed under different numerics
+        return (q.graph, int(q.vertex), pkey, int(q.k),
+                int(self.iterations), self.convergence is not None)
 
     def submit(self, q: PPRQuery) -> Optional[Recommendation]:
         """Cache probe; on miss, enqueue for the next wave and return None."""
@@ -157,13 +218,14 @@ class PPRService:
                            f"(have {list(self._graphs)})")
         if not 0 <= q.vertex < self._graphs[q.graph].num_vertices:
             raise ValueError(f"vertex {q.vertex} out of range for {q.graph!r}")
-        hit = self.cache.get(self._cache_key(q))
+        pkey = self._resolve_precision(q)
+        hit = self.cache.get(self._cache_key(q, pkey))
         self.telemetry.record_cache(hit is not None)
         if hit is not None:
             verts, scores = hit
-            return Recommendation(q, verts.copy(), scores.copy(), source="cache")
-        self.scheduler.submit((q.graph, precision_key(q.precision)), q,
-                              deadline=q.deadline)
+            return Recommendation(q, verts.copy(), scores.copy(),
+                                  source="cache", precision=pkey)
+        self.scheduler.submit((q.graph, pkey), q, deadline=q.deadline)
         return None
 
     def pump(self, now: Optional[float] = None) -> List[Recommendation]:
@@ -212,12 +274,25 @@ class PPRService:
     def telemetry_summary(self) -> Dict[str, float]:
         """Telemetry counters (cache_* = submit-path view) plus the LRU's own
         stats under lru_* — the two diverge once anything touches the cache
-        outside submit() (e.g. a future async prefetcher)."""
+        outside submit() (e.g. a future async prefetcher) — plus the precision
+        controller's ladder counters under autotune_*."""
         s = self.telemetry.summary()
         s.update({f"lru_{k}": v for k, v in self.cache.stats().items()})
+        s.update({f"autotune_{k}": v for k, v in self.controller.summary().items()})
         return s
 
     # ------------------------------------------------------------------
+    def _iterate(self, step, P0, *, fixed: bool, scale: Optional[int]):
+        """Drive one wave's iterations; early-exit when a policy is armed."""
+        if self.convergence is None:
+            P = P0
+            for _ in range(self.iterations):
+                P = step(P)
+            return P, self.iterations
+        P, iters_run, _ = run_until_converged(
+            step, P0, self.iterations, self.convergence, fixed=fixed, scale=scale)
+        return P, iters_run
+
     def _run_wave(self, wave: Wave) -> List[Recommendation]:
         graph_name, pkey = wave.key
         rg = self._graphs[graph_name]
@@ -233,17 +308,20 @@ class PPRService:
 
         if fmt is None:
             Vmat = personalization_matrix(rg.num_vertices, pers)
-            P = Vmat
-            for _ in range(self.iterations):
-                P = ppr_step_float(rg.x, rg.y, rg.val, rg.dangling, Vmat, P,
-                                   num_vertices=rg.num_vertices, alpha=self.alpha)
+            P, iters_run = self._iterate(
+                lambda P: ppr_step_float(rg.x, rg.y, rg.val, rg.dangling, Vmat,
+                                         P, num_vertices=rg.num_vertices,
+                                         alpha=self.alpha),
+                Vmat, fixed=False, scale=None)
         else:
             Vmat = personalization_matrix_fixed(rg.num_vertices, pers, fmt)
-            P = Vmat
             step = make_ppr_fixed_step(fmt, rg.num_vertices, self.alpha)
             val_raw = rg.quantized(fmt)
-            for _ in range(self.iterations):
-                P = step(rg.x, rg.y, val_raw, rg.dangling, Vmat, P)
+            P, iters_run = self._iterate(
+                lambda P_: step(rg.x, rg.y, val_raw, rg.dangling, Vmat, P_),
+                Vmat, fixed=True, scale=fmt.scale)
+        if iters_run < self.iterations:
+            self.telemetry.record_early_exit(self.iterations - iters_run)
 
         k_max = max(q.k for q in wave.items)
         if self.topk_tile is not None:
@@ -263,8 +341,53 @@ class PPRService:
             s_top = scores[col, : q.k].copy()
             # the cache keeps its own copies: callers may mutate their
             # Recommendation arrays without poisoning later hits
-            self.cache.put(self._cache_key(q), (v_top.copy(), s_top.copy()))
+            self.cache.put(self._cache_key(q, pkey), (v_top.copy(), s_top.copy()))
             recs.append(Recommendation(q, v_top, s_top, source="wave",
-                                       wave_id=wave_id, latency_s=latency))
+                                       wave_id=wave_id, latency_s=latency,
+                                       precision=pkey))
         self.telemetry.record_wave(len(wave.items), self.kappa, latency, pkey)
+        self._shadow_feedback(wave, rg, fmt, pkey, P)
         return recs
+
+    # ------------------------------------------------------------------
+    def _shadow_feedback(self, wave: Wave, rg: RegisteredGraph,
+                         fmt: Optional[QFormat], pkey: str, P) -> None:
+        """Quality feedback for the wave's auto queries (sampled).
+
+        Every auto query consumes exactly one sampling draw (in wave order),
+        so a replayed query sequence under a seeded estimator makes identical
+        shadow decisions regardless of how the ladder moved in between.
+        Float32-served auto queries are perfect by definition: their sampled
+        observations feed the ladder and telemetry as 1.0 without running a
+        reference, so ``shadow_quality_mean`` reflects *all* sampled auto
+        traffic, not just the fixed-point share.
+
+        The float32 reference runs only over the sampled columns — shadow
+        cost genuinely scales with ``sample_fraction`` rather than being paid
+        per wave.  (Each distinct sampled-column count compiles its own
+        ``ppr_float`` variant; there are at most κ of them.)
+        """
+        estimator = self.controller.estimator
+        sampled = [(col, q) for col, q in enumerate(wave.items)
+                   if q.precision == AUTO_KEY and estimator.should_sample()]
+        if not sampled:
+            return
+        if fmt is None:
+            for _, q in sampled:
+                self.controller.observe_quality(rg.name, FLOAT_KEY, 1.0,
+                                                target=q.quality_target)
+                self.telemetry.record_shadow(1.0)
+            return
+        pers_sub = jnp.asarray(
+            np.asarray([int(q.vertex) for _, q in sampled], np.int32))
+        P_ref, _ = ppr_float(rg.x, rg.y, rg.val, rg.dangling, pers_sub,
+                             num_vertices=rg.num_vertices,
+                             iterations=self.iterations, alpha=self.alpha)
+        ref = np.asarray(P_ref, np.float64)
+        approx = np.asarray(P, np.float64) / fmt.scale
+        for j, (col, q) in enumerate(sampled):
+            ref_col = ref[:, j]
+            score = self.controller.observe_shadow(
+                rg.name, pkey, approx[:, col], ref_col,
+                target=q.quality_target, ref_order=ranking(ref_col))
+            self.telemetry.record_shadow(score)

@@ -1,10 +1,17 @@
 """Service telemetry: per-wave latency, throughput, batch occupancy, cache
-hit-rate.
+hit-rate, and the adaptive-precision counters.
 
 The occupancy counter is the serving-side view of the paper's κ-batching
 economics: a wave amortizes one full edge-stream pass over its occupants, so
 mean occupancy × κ is the effective amortization factor actually achieved
 under real traffic (deadline flushes of partial waves lower it).
+
+The autotune counters close the loop's observability: how many shadow
+(float32 reference) evaluations were spent, what quality they measured, how
+many iterations early-exit saved against the fixed budget (paper Fig. 7's
+"additional 2x"), and which precisions traffic was actually served at — the
+served-precision distribution is the live realization of Figs. 4-6's
+quality/bit-width dial.
 """
 from __future__ import annotations
 
@@ -21,6 +28,12 @@ class ServiceTelemetry:
         self.queries_served = 0
         self.cache_hits = 0
         self.cache_misses = 0
+        # adaptive-precision subsystem (repro.autotune)
+        self.served_by_precision: Dict[str, int] = {}
+        self.auto_resolved: Dict[str, int] = {}
+        self.shadow_scores: List[float] = []
+        self.early_exit_waves = 0
+        self.iterations_saved = 0
 
     # ------------------------------------------------------------------
     def record_wave(self, n_queries: int, kappa: int, latency_s: float,
@@ -29,6 +42,8 @@ class ServiceTelemetry:
         self.wave_occupancies.append(n_queries / float(kappa))
         self.wave_precisions.append(precision)
         self.queries_served += n_queries
+        self.served_by_precision[precision] = \
+            self.served_by_precision.get(precision, 0) + n_queries
 
     def record_cache(self, hit: bool) -> None:
         if hit:
@@ -36,16 +51,34 @@ class ServiceTelemetry:
         else:
             self.cache_misses += 1
 
+    def record_auto_resolution(self, resolved_precision: str) -> None:
+        """One ``precision="auto"`` query resolved to a concrete format."""
+        self.auto_resolved[resolved_precision] = \
+            self.auto_resolved.get(resolved_precision, 0) + 1
+
+    def record_shadow(self, score: float) -> None:
+        """One shadow evaluation (float32 reference run + metric score)."""
+        self.shadow_scores.append(float(score))
+
+    def record_early_exit(self, iterations_saved: int) -> None:
+        """A wave stopped ``iterations_saved`` iterations short of its budget."""
+        self.early_exit_waves += 1
+        self.iterations_saved += int(iterations_saved)
+
     # ------------------------------------------------------------------
     @property
     def waves(self) -> int:
         return len(self.wave_latencies_s)
 
+    @property
+    def shadow_evaluations(self) -> int:
+        return len(self.shadow_scores)
+
     def summary(self) -> Dict[str, float]:
         lat = np.asarray(self.wave_latencies_s, np.float64)
         total_s = float(lat.sum()) if lat.size else 0.0
         cache_total = self.cache_hits + self.cache_misses
-        return {
+        out = {
             "waves": self.waves,
             "queries_served": self.queries_served,
             "queries_per_s": self.queries_served / total_s if total_s else 0.0,
@@ -56,4 +89,14 @@ class ServiceTelemetry:
             "cache_hits": self.cache_hits,
             "cache_misses": self.cache_misses,
             "cache_hit_rate": self.cache_hits / cache_total if cache_total else 0.0,
+            "shadow_evaluations": self.shadow_evaluations,
+            "shadow_quality_mean": float(np.mean(self.shadow_scores))
+            if self.shadow_scores else 0.0,
+            "early_exit_waves": self.early_exit_waves,
+            "iterations_saved": self.iterations_saved,
         }
+        for pkey, n in sorted(self.served_by_precision.items()):
+            out[f"served_{pkey}"] = n
+        for pkey, n in sorted(self.auto_resolved.items()):
+            out[f"auto_{pkey}"] = n
+        return out

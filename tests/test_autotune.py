@@ -1,0 +1,398 @@
+"""Adaptive-precision subsystem (repro.autotune): estimator windows, controller
+hysteresis, early-exit convergence (bit-identity + savings), shadow-sampling
+determinism, and the serving-layer integration (auto resolution, cache
+invalidation on re-registration, cache-key numerics)."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.autotune import (
+    AutotuneConfig,
+    ConvergencePolicy,
+    PrecisionController,
+    QualityEstimator,
+    ShadowConfig,
+    run_until_converged,
+    score_quality,
+)
+from repro.core import format_for_bits
+from repro.core.ppr import make_ppr_fixed_step, personalization_matrix_fixed
+from repro.graphs import erdos_renyi, holme_kim_powerlaw
+from repro.ppr_serving import FLOAT_KEY, PPRQuery, PPRService
+
+
+@pytest.fixture(scope="module")
+def graph():
+    return holme_kim_powerlaw(300, m=3, seed=1)
+
+
+# ---------------------------------------------------------------------------
+# quality estimator
+# ---------------------------------------------------------------------------
+def test_estimator_window_mean_and_abstention():
+    est = QualityEstimator(ShadowConfig(window=4, min_samples=3))
+    est.record("g", "Q1.25", 0.9)
+    est.record("g", "Q1.25", 1.0)
+    assert est.estimate("g", "Q1.25") is None        # window too thin to act on
+    est.record("g", "Q1.25", 0.8)
+    assert abs(est.estimate("g", "Q1.25") - 0.9) < 1e-12
+    for _ in range(4):                               # slide the old scores out
+        est.record("g", "Q1.25", 1.0)
+    assert est.estimate("g", "Q1.25") == 1.0
+    assert est.estimate("g", "Q1.19") is None        # untouched format
+    est.forget_graph("g")
+    assert est.estimate("g", "Q1.25") is None
+
+
+def test_shadow_sampling_deterministic_under_seed():
+    a = QualityEstimator(ShadowConfig(sample_fraction=0.5, seed=7))
+    b = QualityEstimator(ShadowConfig(sample_fraction=0.5, seed=7))
+    seq_a = [a.should_sample() for _ in range(200)]
+    seq_b = [b.should_sample() for _ in range(200)]
+    assert seq_a == seq_b
+    assert any(seq_a) and not all(seq_a)             # actually probabilistic
+    c = QualityEstimator(ShadowConfig(sample_fraction=0.5, seed=8))
+    assert [c.should_sample() for _ in range(200)] != seq_a
+
+
+def test_score_quality_perfect_and_degraded():
+    rng = np.random.default_rng(0)
+    ref = rng.random(400)
+    assert score_quality(ref, ref, metric="ndcg", k=50) == 1.0
+    assert score_quality(ref, ref, metric="precision", k=50) == 1.0
+    noisy = ref + rng.normal(0, 0.5, 400)
+    assert score_quality(noisy, ref, metric="ndcg", k=50) < 1.0
+
+
+# ---------------------------------------------------------------------------
+# precision controller: ladder + hysteresis
+# ---------------------------------------------------------------------------
+def _controller(window=1, **kw):
+    cfg = AutotuneConfig(shadow=ShadowConfig(min_samples=1, window=window), **kw)
+    return PrecisionController(cfg)
+
+
+def test_controller_starts_at_widest_fixed_format():
+    ctl = _controller()
+    fmt = ctl.resolve("g", 0.95)
+    assert fmt is not None and fmt.name == "Q1.25"   # fixed, never float, day one
+
+
+def test_controller_demotes_to_float_after_patience():
+    ctl = _controller(demote_patience=2)
+    ctl.observe_quality("g", "Q1.25", 0.5, target=0.95)
+    assert ctl.resolve("g", 0.95).name == "Q1.25"    # one bad window: hold
+    ctl.observe_quality("g", "Q1.25", 0.5, target=0.95)
+    assert ctl.resolve("g", 0.95) is None            # second: float32 fallback
+    assert ctl.demotions == 1
+
+
+def test_controller_promotes_to_narrower_after_patience():
+    ctl = _controller(promote_patience=3)
+    for i in range(3):
+        assert ctl.resolve("g", 0.9).name == "Q1.25"
+        ctl.observe_quality("g", "Q1.25", 1.0, target=0.9)
+    assert ctl.resolve("g", 0.9).name == "Q1.23"     # next-cheaper rung
+    assert ctl.promotions == 1
+
+
+def test_controller_hysteresis_no_thrash_on_alternating_windows():
+    """window=1 makes each observation a window estimate; alternating
+    good/bad estimates must never move the rung in either direction."""
+    ctl = _controller(promote_patience=2, demote_patience=2)
+    start = ctl.resolve("g", 0.95).name
+    for i in range(20):
+        ctl.observe_quality("g", "Q1.25", 1.0 if i % 2 == 0 else 0.5,
+                            target=0.95)
+    assert ctl.resolve("g", 0.95).name == start
+    assert ctl.promotions == 0 and ctl.demotions == 0
+
+
+def test_controller_dead_band_holds_and_resets_streaks():
+    """Estimates on-target but inside the promote margin neither promote nor
+    extend a demotion streak."""
+    ctl = _controller(promote_patience=2, demote_patience=2,
+                      promote_margin=0.02)
+    for _ in range(10):
+        ctl.observe_quality("g", "Q1.25", 0.955, target=0.95)  # in dead band
+    assert ctl.resolve("g", 0.95).name == "Q1.25"
+    assert ctl.promotions == 0 and ctl.demotions == 0
+
+
+def test_controller_ignores_stale_format_samples():
+    """Scores for a format that is not the current rung must not steer."""
+    ctl = _controller(demote_patience=1)
+    for _ in range(5):
+        ctl.observe_quality("g", "Q1.19", 0.1, target=0.95)    # not the rung
+    assert ctl.resolve("g", 0.95).name == "Q1.25"
+    assert ctl.demotions == 0
+
+
+def test_controller_per_target_states_are_independent():
+    ctl = _controller(demote_patience=1)
+    ctl.observe_quality("g", "Q1.25", 0.5, target=0.99)
+    assert ctl.resolve("g", 0.99) is None            # demoted for target 0.99
+    assert ctl.resolve("g", 0.90).name == "Q1.25"    # target 0.90 untouched
+
+
+def test_controller_float_observations_climb_back_down():
+    ctl = _controller(demote_patience=1, promote_patience=2)
+    ctl.observe_quality("g", "Q1.25", 0.2, target=0.95)
+    assert ctl.resolve("g", 0.95) is None
+    for _ in range(2):                               # float serves are perfect
+        ctl.observe_quality("g", FLOAT_KEY, 1.0, target=0.95)
+    assert ctl.resolve("g", 0.95).name == "Q1.25"    # re-probing fixed point
+
+
+def test_controller_backoff_on_persistently_failing_probe():
+    """A narrower rung that keeps missing its target is re-probed with
+    geometrically increasing patience instead of cycling forever."""
+    ctl = _controller(promote_patience=1, demote_patience=1)
+    gaps = []
+    for _ in range(4):
+        goods = 0
+        while ctl.resolve("g", 0.95).name == "Q1.25":   # climb to the probe
+            ctl.observe_quality("g", "Q1.25", 1.0, target=0.95)
+            goods += 1
+        gaps.append(goods)
+        ctl.observe_quality("g", "Q1.23", 0.5, target=0.95)  # probe fails
+        assert ctl.resolve("g", 0.95).name == "Q1.25"        # demoted back
+    assert gaps == [1, 2, 4, 8]                          # exponential backoff
+
+
+def test_controller_backoff_resets_after_successful_probe():
+    ctl = _controller(promote_patience=1, demote_patience=1)
+    state = lambda: ctl._states[("g", 0.95)]
+    ctl.observe_quality("g", "Q1.25", 1.0, target=0.95)  # → Q1.23 (probe)
+    ctl.observe_quality("g", "Q1.23", 0.5, target=0.95)  # fail → back
+    assert state().promote_backoff == 2
+    for _ in range(2):                                   # backoff'd patience
+        ctl.observe_quality("g", "Q1.25", 1.0, target=0.95)
+    assert ctl.resolve("g", 0.95).name == "Q1.23"        # probing again
+    for _ in range(2):                                   # probe survives and
+        ctl.observe_quality("g", "Q1.23", 1.0, target=0.95)
+    assert ctl.resolve("g", 0.95).name == "Q1.21"        # promotes further
+    assert state().promote_backoff == 1                  # trust restored
+
+
+def test_controller_rejects_bad_targets_and_ladders():
+    ctl = _controller()
+    with pytest.raises(ValueError):
+        ctl.resolve("g", 0.0)
+    with pytest.raises(ValueError):
+        ctl.resolve("g", 1.5)
+    with pytest.raises(ValueError):
+        AutotuneConfig(ladder=())
+    with pytest.raises(ValueError):
+        AutotuneConfig(ladder=(26, 20))
+
+
+# ---------------------------------------------------------------------------
+# early-exit convergence (paper Fig. 7)
+# ---------------------------------------------------------------------------
+def _fixed_step_closure(g, fmt, pers, alpha=0.85):
+    gp = g.pad_to_packets(256)
+    x, y = jnp.asarray(gp.x), jnp.asarray(gp.y)
+    d, val = jnp.asarray(gp.dangling), jnp.asarray(gp.quantized_val(fmt))
+    step = make_ppr_fixed_step(fmt, gp.num_vertices, alpha)
+    V = personalization_matrix_fixed(gp.num_vertices, jnp.asarray(pers), fmt)
+    return (lambda P: step(x, y, val, d, V, P)), V
+
+
+def test_early_exit_bit_identical_to_full_budget(graph):
+    """Fixed point settles into its absorbing state/cycle; exiting there must
+    reproduce the full-budget state bit-for-bit at any budget parity."""
+    fmt = format_for_bits(16)
+    step, V = _fixed_step_closure(graph, fmt, np.array([3, 17], np.int32))
+    for budget in (100, 101):                        # both parities
+        P, n, _ = run_until_converged(step, V, budget, ConvergencePolicy(),
+                                      fixed=True, scale=fmt.scale)
+        assert n < budget                            # it did exit early
+        P_full = V
+        for _ in range(budget):
+            P_full = step(P_full)
+        assert bool(jnp.array_equal(P, P_full))
+
+
+def test_early_exit_respects_budget_when_not_converged(graph):
+    fmt = format_for_bits(26)                        # absorbs late (~94 iters)
+    step, V = _fixed_step_closure(graph, fmt, np.array([3], np.int32))
+    P, n, deltas = run_until_converged(step, V, 10, ConvergencePolicy(),
+                                       fixed=True, scale=fmt.scale)
+    assert n == 10 and deltas[-1] > 0.0
+
+
+def test_service_early_exit_equals_full_run(graph):
+    """Service-level: early-exited waves return the same recommendations as a
+    full-budget service, and the saved iterations are telemetered."""
+    budget = 100
+    svc_ee = PPRService(kappa=4, iterations=budget, early_exit=True)
+    svc_full = PPRService(kappa=4, iterations=budget)
+    for s in (svc_ee, svc_full):
+        s.register_graph("g", graph, formats=[16])
+    verts = [3, 17, 42, 77]
+    recs_ee = svc_ee.serve([PPRQuery("g", v, k=10, precision=16) for v in verts])
+    recs_full = svc_full.serve([PPRQuery("g", v, k=10, precision=16) for v in verts])
+    for a, b in zip(recs_ee, recs_full):
+        np.testing.assert_array_equal(a.vertices, b.vertices)
+        np.testing.assert_array_equal(a.scores, b.scores)
+    assert svc_ee.telemetry.early_exit_waves == 1
+    assert svc_ee.telemetry.iterations_saved > 0
+    assert svc_full.telemetry.iterations_saved == 0
+
+
+def test_service_float_early_exit_fires(graph):
+    svc = PPRService(kappa=2, iterations=120, early_exit=True)
+    svc.register_graph("g", graph)
+    svc.serve([PPRQuery("g", 5), PPRQuery("g", 9)])
+    assert svc.telemetry.early_exit_waves == 1       # float hits 1e-6 < 120
+    assert svc.telemetry.iterations_saved > 0
+
+
+def test_convergence_policy_validation():
+    with pytest.raises(ValueError):
+        ConvergencePolicy(min_iterations=0)
+    with pytest.raises(ValueError):
+        ConvergencePolicy(check_every=0)
+
+
+# ---------------------------------------------------------------------------
+# serving integration: precision="auto"
+# ---------------------------------------------------------------------------
+def _auto_service(graph, **svc_kw):
+    cfg = AutotuneConfig(
+        shadow=ShadowConfig(sample_fraction=1.0, min_samples=2, window=8))
+    svc = PPRService(kappa=4, iterations=10, autotune=cfg, **svc_kw)
+    svc.register_graph("g", graph)
+    return svc
+
+
+def test_auto_serves_fixed_point_and_meets_target(graph):
+    """Acceptance: auto queries with an NDCG target >= 0.95 are served at a
+    narrower format than float32 and the shadow estimator confirms the
+    target is met."""
+    svc = _auto_service(graph)
+    rng = np.random.default_rng(0)
+    queries = [PPRQuery("g", int(v), k=10, precision="auto", quality_target=0.95)
+               for v in rng.integers(0, graph.num_vertices, 16)]
+    recs = svc.serve(queries)
+    assert len(recs) == 16
+    assert all(r.precision != FLOAT_KEY for r in recs)     # narrower than f32
+    s = svc.telemetry_summary()
+    assert s["shadow_evaluations"] > 0
+    assert s["shadow_quality_mean"] >= 0.95                # target met
+    assert sum(v for k, v in s.items() if k.startswith("auto_")) == 16
+
+
+def test_auto_batches_with_explicit_same_format_traffic(graph):
+    """Auto resolution happens before admission, so auto queries share waves
+    with explicit queries at the resolved format."""
+    svc = _auto_service(graph)
+    resolved = svc.controller.resolve("g", None).name
+    qs = [PPRQuery("g", 1, precision="auto"),
+          PPRQuery("g", 2, precision=resolved),
+          PPRQuery("g", 3, precision="auto"),
+          PPRQuery("g", 4, precision=resolved)]
+    svc.serve(qs)
+    assert svc.telemetry.waves == 1                        # one shared wave
+
+
+def test_auto_shadow_pipeline_deterministic(graph):
+    """Two identical services replaying the same query sequence make identical
+    sampling decisions and produce identical shadow scores."""
+    def run_once():
+        cfg = AutotuneConfig(shadow=ShadowConfig(sample_fraction=0.5,
+                                                 min_samples=2, seed=3))
+        svc = PPRService(kappa=4, iterations=10, autotune=cfg)
+        svc.register_graph("g", graph)
+        rng = np.random.default_rng(1)
+        qs = [PPRQuery("g", int(v), precision="auto")
+              for v in rng.integers(0, graph.num_vertices, 16)]
+        svc.serve(qs)
+        return (svc.telemetry.shadow_scores,
+                svc.telemetry.auto_resolved,
+                svc.controller.estimator.shadow_evaluations)
+    assert run_once() == run_once()
+
+
+def test_auto_demotes_to_float_on_unreachable_target(graph):
+    """A target no fixed format can meet walks the ladder up to float32.
+
+    An Erdős–Rényi graph decorrelates vertex id from degree, so an 8-bit
+    format (which truncates all but a handful of ranks to zero, leaving
+    ascending-id tie-break fill) scores genuinely badly — NDCG@50 ≈ 0.65.
+    On the power-law fixture hubs get the low ids and the same tie-break
+    *accidentally* reconstructs the reference top-k, which is why this test
+    needs its own graph."""
+    g = erdos_renyi(300, 1800, seed=3)
+    cfg = AutotuneConfig(
+        ladder=(8,),                                   # Q1.7: hopeless on ER
+        demote_patience=1,
+        shadow=ShadowConfig(sample_fraction=1.0, min_samples=1, window=2))
+    svc = PPRService(kappa=2, iterations=10, autotune=cfg)
+    svc.register_graph("g", g)
+    for v in (5, 9, 11, 21, 33, 41):
+        svc.serve([PPRQuery("g", v, precision="auto", quality_target=0.95)])
+    assert svc.controller.resolve("g", 0.95) is None       # float32 rung
+    # ≥1: float successes periodically re-probe Q1.7, which re-demotes
+    assert svc.controller.demotions >= 1
+    served = svc.telemetry.served_by_precision
+    assert FLOAT_KEY in served                             # later queries exact
+    assert served.get("Q1.7", 0) >= 1                      # first probe was fixed
+
+
+def test_normalize_precision_rejects_auto():
+    from repro.ppr_serving import normalize_precision
+    with pytest.raises(ValueError):
+        normalize_precision("auto")
+
+
+# ---------------------------------------------------------------------------
+# cache correctness satellites
+# ---------------------------------------------------------------------------
+def test_register_graph_invalidates_stale_cache_entries(graph):
+    svc = PPRService(kappa=2, iterations=5)
+    svc.register_graph("g", graph)
+    first = svc.serve([PPRQuery("g", 7, k=5)])[0]
+    assert svc.serve([PPRQuery("g", 7, k=5)])[0].source == "cache"
+    g2 = erdos_renyi(280, 1700, seed=9)                    # different topology
+    svc.register_graph("g", g2)                            # same name
+    again = svc.serve([PPRQuery("g", 7, k=5)])[0]
+    assert again.source == "wave"                          # stale rank evicted
+    assert svc.cache.invalidations > 0
+    assert not np.array_equal(again.vertices, first.vertices)
+    before = svc.cache.invalidations
+    svc.register_graph("h", graph)                         # new name: no-op path
+    assert svc.cache.invalidations == before
+
+
+def test_register_graph_drops_pending_queries_for_old_topology(graph):
+    """Queries validated against the old graph must not launch against the
+    new one (their vertices may be out of range — JAX scatter would silently
+    drop them and serve garbage)."""
+    svc = PPRService(kappa=8, iterations=5)        # κ=8: the query stays queued
+    svc.register_graph("g", graph)                 # |V| = 300
+    assert svc.submit(PPRQuery("g", 299, k=5)) is None
+    svc.register_graph("g", erdos_renyi(100, 600, seed=1))   # vertex 299 gone
+    assert svc.scheduler.pending() == 0
+    assert svc.drain() == []                       # nothing stale launches
+
+
+def test_cache_key_separates_budget_and_early_exit_numerics(graph):
+    q = PPRQuery("g", 1, k=5)
+    k10 = PPRService(iterations=10)._cache_key(q, "Q1.25")
+    k20 = PPRService(iterations=20)._cache_key(q, "Q1.25")
+    kee = PPRService(iterations=10, early_exit=True)._cache_key(q, "Q1.25")
+    kf = PPRService(iterations=10)._cache_key(q, FLOAT_KEY)
+    assert len({k10, k20, kee, kf}) == 4
+
+
+def test_lru_invalidate_predicate():
+    from repro.ppr_serving import LRUCache
+    c = LRUCache(capacity=8)
+    c.put(("a", 1), "x")
+    c.put(("a", 2), "y")
+    c.put(("b", 1), "z")
+    assert c.invalidate(lambda k: k[0] == "a") == 2
+    assert c.get(("a", 1)) is None and c.get(("b", 1)) == "z"
+    assert c.invalidations == 2

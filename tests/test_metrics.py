@@ -1,13 +1,17 @@
 """Ranking-metric unit tests (paper §5.3.1 definitions)."""
 import numpy as np
+import pytest
 
 from repro.core.metrics import (
+    _kendall_tau_b,
     edit_distance,
+    full_report,
     kendall_tau,
     mae,
     ndcg,
     num_errors,
     precision_at,
+    ranking,
     topk_indices,
 )
 
@@ -64,3 +68,80 @@ def test_topk_deterministic_ties():
 def test_kendall_reversal():
     ref = np.arange(50, dtype=float)
     assert abs(kendall_tau(-ref, ref, 10) - (-1.0)) < 1e-9
+
+
+# ---------------------------------------------------------------------------
+# edges: n > |V|, tie-breaking, the numpy τ-b fallback, precomputed orders
+# ---------------------------------------------------------------------------
+def test_topk_n_exceeds_num_vertices():
+    s = np.random.default_rng(0).random(7)
+    got = topk_indices(s, 50)
+    assert got.shape == (7,)                     # clamped, not padded
+    np.testing.assert_array_equal(got, ranking(s))
+
+
+def test_metrics_n_exceeds_num_vertices():
+    rng = np.random.default_rng(1)
+    s = rng.random(7)
+    assert ndcg(s, s, 50) == 1.0                 # was a shape error pre-clamp
+    assert precision_at(s, s, 50) == 1.0         # was 7/50 pre-clamp
+    assert num_errors(s, s, 50) == 0
+    assert edit_distance(s, s, 50) == 0
+    assert kendall_tau(s, s, 50) == 1.0
+    noisy = s + rng.normal(0, 0.3, 7)
+    assert 0.0 < ndcg(noisy, s, 50) <= 1.0       # finite on mismatch too
+
+
+def test_ndcg_tie_breaking_deterministic():
+    """All-tied scores rank by ascending id in both arguments, so a fully
+    tied approx against a fully tied ref is a perfect (deterministic) match."""
+    tied = np.zeros(20)
+    assert ndcg(tied, tied, 10) == 1.0
+    assert num_errors(tied, tied, 10) == 0
+    # partially tied: the tied block must order by id, not by memory noise
+    s = np.array([0.5, 0.2, 0.2, 0.2, 0.1])
+    np.testing.assert_array_equal(topk_indices(s, 4), [0, 1, 2, 3])
+
+
+def test_kendall_numpy_fallback_matches_scipy():
+    st = pytest.importorskip("scipy.stats")
+    rng = np.random.default_rng(2)
+    for _ in range(25):
+        n = int(rng.integers(2, 40))
+        x = rng.integers(0, 6, n).astype(float)  # heavy ties
+        y = rng.integers(0, 6, n).astype(float)
+        ours = _kendall_tau_b(x, y)
+        theirs = st.kendalltau(x, y)[0]
+        if np.isfinite(theirs):
+            assert abs(ours - theirs) < 1e-12
+        else:
+            assert not np.isfinite(ours)
+
+
+def test_kendall_numpy_fallback_known_values():
+    assert _kendall_tau_b(np.arange(5.0), np.arange(5.0)) == 1.0
+    assert _kendall_tau_b(np.arange(5.0), -np.arange(5.0)) == -1.0
+    assert np.isnan(_kendall_tau_b(np.ones(4), np.arange(4.0)))  # degenerate
+    assert np.isnan(_kendall_tau_b(np.array([1.0]), np.array([1.0])))
+
+
+def test_full_report_precomputed_reference_matches():
+    rng = np.random.default_rng(3)
+    ref = rng.random(200)
+    approx = ref + rng.normal(0, 0.05, 200)
+    assert full_report(approx, ref) == \
+        full_report(approx, ref, ref_order=ranking(ref))
+
+
+def test_metric_precomputed_orders_match_fresh():
+    rng = np.random.default_rng(4)
+    ref = rng.integers(0, 30, 120).astype(float)     # ties galore
+    approx = rng.integers(0, 30, 120).astype(float)
+    ao, ro = ranking(approx), ranking(ref)
+    kw = {"approx_order": ao, "ref_order": ro}
+    assert num_errors(approx, ref, 15, **kw) == num_errors(approx, ref, 15)
+    assert edit_distance(approx, ref, 15, **kw) == edit_distance(approx, ref, 15)
+    assert ndcg(approx, ref, 15, **kw) == ndcg(approx, ref, 15)
+    assert precision_at(approx, ref, 15, **kw) == precision_at(approx, ref, 15)
+    assert kendall_tau(approx, ref, 15, ref_order=ro) == \
+        kendall_tau(approx, ref, 15)
