@@ -20,7 +20,8 @@ from typing import Any
 import numpy as np
 
 from benchmarks import (bench_accuracy, bench_autotune, bench_convergence,
-                        bench_ppr, bench_serving_ppr, bench_spmv)
+                        bench_ppr, bench_serving_ppr, bench_sharded_serving,
+                        bench_spmv)
 from benchmarks import roofline_report
 
 
@@ -47,10 +48,18 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--scale", type=float, default=0.02)
     ap.add_argument("--full", action="store_true", help="paper-size graphs")
+    ap.add_argument("--dry-run", action="store_true",
+                    help="CI smoke: tiny graphs, reduced configs, every section "
+                         "— with --json this produces the BENCH_<section>.json "
+                         "baselines the perf trajectory is tracked against")
     ap.add_argument("--json", metavar="DIR", nargs="?", const=".", default=None,
                     help="also write BENCH_<section>.json rows into DIR")
     args = ap.parse_args()
     scale = 1.0 if args.full else args.scale
+    if args.dry_run:
+        # sections without a native dry-run mode shrink through scale alone
+        scale = min(scale, 0.005)
+    dry = args.dry_run
     if args.json:
         os.makedirs(args.json, exist_ok=True)
 
@@ -64,9 +73,11 @@ def main() -> None:
         ("spmv", "bench_spmv (paper Table 2 analogue: kernel characterization)",
          lambda: bench_spmv.main(scale=scale)),
         ("serving_ppr", "bench_serving_ppr (PPRService: queries/s, p50/p95 vs kappa x precision)",
-         lambda: bench_serving_ppr.main(scale=scale)),
+         lambda: bench_serving_ppr.main(scale=scale, dry_run=dry)),
         ("autotune", "bench_autotune (adaptive precision: quality targets vs static formats)",
-         lambda: bench_autotune.main(scale=scale)),
+         lambda: bench_autotune.main(scale=scale, dry_run=dry)),
+        ("sharded_serving", "bench_sharded_serving (mesh serving: queries/s vs shard count)",
+         lambda: bench_sharded_serving.main(scale=scale, dry_run=dry)),
         ("roofline", "roofline (dry-run artifacts; EXPERIMENTS.md section Roofline)",
          lambda: roofline_report.main()),
     ]

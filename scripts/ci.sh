@@ -1,6 +1,10 @@
 #!/usr/bin/env bash
-# CI entry point: tier-1 suite + the serving smoke benchmark.
+# CI entry point: tier-1 suite + the full dry-run benchmark sweep.
 #   scripts/ci.sh
+#
+# The benchmark sweep writes BENCH_<section>.json baselines into the repo
+# root (committed), so every PR leaves a machine-readable point on the perf
+# trajectory — including the sharded-serving section.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
@@ -8,8 +12,5 @@ export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 echo "== tier-1: pytest =="
 python -m pytest -x -q
 
-echo "== smoke: PPRService benchmark (dry run) =="
-python benchmarks/bench_serving_ppr.py --dry-run
-
-echo "== smoke: adaptive-precision benchmark (dry run) =="
-python benchmarks/bench_autotune.py --dry-run
+echo "== smoke + baselines: benchmark sweep (dry run, JSON into repo root) =="
+python -m benchmarks.run --dry-run --json .

@@ -10,7 +10,9 @@ Empirically (and reproducibly with this repo's bit-exact datapath) the
 absorbing state takes one of two shapes:
 
 - a strict fixed point: one more eq. (1) iteration reproduces P bit-for-bit
-  (per-wave delta == 0); or
+  (checked by exact integer comparison — the float delta statistic cannot be
+  trusted here, since casting raw uint32 to float32 rounds a 1-LSB change at
+  raw values ≥ 2^24 to delta == 0); or
 - a **period-2 absorbing cycle**: a handful of entries flip by one LSB each
   iteration and flip back (truncation alternately rounds them down and re-adds
   the lost mass), so consecutive states alternate A, B, A, B, … and the delta
@@ -90,10 +92,16 @@ class ConvergenceMonitor:
     """
 
     def __init__(self, policy: ConvergencePolicy, *, fixed: bool,
-                 scale: Optional[int] = None):
+                 scale: Optional[int] = None, track_deltas: bool = True):
         self.policy = policy
         self.fixed = fixed
         self.scale = scale
+        # The fixed path converges on exact integer comparisons; its float
+        # delta is telemetry only.  A driver that discards the trace (the
+        # serving hot path) passes track_deltas=False to skip that second
+        # full-array reduction + host sync per checked iteration.  The float
+        # path always computes the delta — it *is* the exit criterion there.
+        self.track_deltas = track_deltas
         self.iterations = 0
         self.deltas: List[float] = []
         self.converged = False
@@ -111,16 +119,28 @@ class ConvergenceMonitor:
             self._prev2 = P_prev                # keep S_{t-1} as next S_{t-2}
         if not checking:
             return False                        # skip the host syncs
-        delta = wave_delta(P_new, P_prev, self.scale)
-        self.deltas.append(delta)
-        if self.iterations < self.policy.min_iterations:
-            return False
         if self.fixed:
-            if delta == 0.0:                    # strict absorbing state
+            # The strict check must be exact integer equality, not the float
+            # delta: ``wave_delta`` casts raw uint32 to float32, so for raw
+            # values >= 2^24 (scores >= 0.5 in Q1.25) a 1-LSB state change
+            # rounds to delta == 0.0 and a "bit-identical" exit would return
+            # a non-fixed-point.  The float delta is telemetry-only here, and
+            # its reduction is skipped when exact equality already proves it 0.
+            strict = states_equal(P_new, P_prev)
+            if self.track_deltas:
+                self.deltas.append(
+                    0.0 if strict else wave_delta(P_new, P_prev, self.scale))
+            if self.iterations < self.policy.min_iterations:
+                return False
+            if strict:                          # strict absorbing state
                 self.converged = True
             elif prev2 is not None and states_equal(P_new, prev2):
                 self.converged = self.cycle = True
         else:
+            delta = wave_delta(P_new, P_prev, self.scale)
+            self.deltas.append(delta)
+            if self.iterations < self.policy.min_iterations:
+                return False
             self.converged = delta < self.policy.epsilon
         return self.converged
 
@@ -133,6 +153,7 @@ def run_until_converged(
     *,
     fixed: bool,
     scale: Optional[int] = None,
+    track_deltas: bool = True,
 ) -> Tuple[Array, int, List[float]]:
     """Drive one eq. (1) step function until convergence or budget exhaustion.
 
@@ -140,8 +161,10 @@ def run_until_converged(
     point exits are bit-identical to the full-budget run: a strict absorbing
     state is a fixed point of ``step``, and on a period-2 absorbing cycle the
     full-budget result is recovered by parity (S_B = S_t when B ≡ t mod 2,
-    else S_{t-1})."""
-    monitor = ConvergenceMonitor(policy, fixed=fixed, scale=scale)
+    else S_{t-1}).  ``track_deltas=False`` skips the fixed path's
+    telemetry-only delta reductions; the returned trace is then empty there."""
+    monitor = ConvergenceMonitor(policy, fixed=fixed, scale=scale,
+                                 track_deltas=track_deltas)
     P = P0
     for t in range(1, max_iterations + 1):
         P_next = step(P)                        # P = S_{t-1}, P_next = S_t

@@ -15,19 +15,32 @@ from repro.core.ppr import (
     batched_ppr,
     make_ppr_fixed,
     make_ppr_fixed_step,
+    make_ppr_sharded_fixed_step,
+    make_ppr_sharded_float_step,
     personalization_matrix,
     personalization_matrix_fixed,
     ppr_float,
     ppr_step_float,
     run_ppr,
 )
-from repro.core.spmv import spmv_fixed, spmv_float, spmv_pallas
+from repro.core.spmv import (
+    make_sharded_spmv,
+    make_sharded_spmv_fixed,
+    partition_edges_by_dst,
+    sharded_vertex_layout,
+    spmv_fixed,
+    spmv_float,
+    spmv_pallas,
+)
 
 __all__ = [
     "COOGraph", "BlockedCOO", "QFormat", "format_for_bits",
     "Q1_19", "Q1_21", "Q1_23", "Q1_25", "PAPER_FORMATS", "BITWIDTH_TO_FORMAT",
     "PPRConfig", "run_ppr", "batched_ppr", "ppr_float", "make_ppr_fixed",
     "ppr_step_float", "make_ppr_fixed_step",
+    "make_ppr_sharded_float_step", "make_ppr_sharded_fixed_step",
     "personalization_matrix", "personalization_matrix_fixed",
     "spmv_float", "spmv_fixed", "spmv_pallas",
+    "make_sharded_spmv", "make_sharded_spmv_fixed",
+    "partition_edges_by_dst", "sharded_vertex_layout",
 ]

@@ -23,6 +23,7 @@ All ops are jittable and shape-polymorphic.
 from __future__ import annotations
 
 import dataclasses
+import operator
 from typing import Union
 
 import jax
@@ -160,5 +161,18 @@ BITWIDTH_TO_FORMAT = {26: Q1_25, 24: Q1_23, 22: Q1_21, 20: Q1_19}
 
 
 def format_for_bits(bits: int) -> QFormat:
-    """Paper convention: 'b bits' = Q1.(b-1) unsigned."""
+    """Paper convention: 'b bits' = Q1.(b-1) unsigned.
+
+    ``bits`` must leave at least the 1 integer bit and 1 fractional bit —
+    anything narrower cannot represent the paper's [0, 1] rank values.
+    """
+    if isinstance(bits, bool):
+        raise ValueError(f"bit-width must be an int, got {bits!r}")
+    try:
+        bits = int(operator.index(bits))   # accept numpy ints, reject floats
+    except TypeError:
+        raise ValueError(f"bit-width must be an int, got {bits!r}") from None
+    if bits < 2:
+        raise ValueError(
+            f"bit-width must be >= 2 (1 integer + >=1 fractional bit), got {bits}")
     return BITWIDTH_TO_FORMAT.get(bits, QFormat(1, bits - 1))

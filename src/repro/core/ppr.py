@@ -26,7 +26,12 @@ import numpy as np
 
 from repro.core.coo import COOGraph
 from repro.core.fixed_point import QFormat
-from repro.core.spmv import spmv_fixed, spmv_float
+from repro.core.spmv import (
+    make_sharded_spmv,
+    make_sharded_spmv_fixed,
+    spmv_fixed,
+    spmv_float,
+)
 
 Array = jax.Array
 
@@ -59,11 +64,18 @@ _personalization_matrix = personalization_matrix  # backwards-compat alias
 # ----------------------------------------------------------------------------
 # single-iteration bodies (shared by the scan drivers and the step API)
 # ----------------------------------------------------------------------------
+def _float_combine(xp, dangling_mass, Vmat, *, num_vertices: int, alpha: float):
+    """eq. (1) elementwise combine — shared by the single-device and sharded
+    steps so both apply bit-identical float ops after the SpMV."""
+    return alpha * xp + (alpha / num_vertices) * dangling_mass[None, :] \
+        + (1.0 - alpha) * Vmat
+
+
 def _float_iteration(x, y, val, d, Vmat, P, *, num_vertices: int, alpha: float):
     dangling_mass = d @ P                                        # [K]
     xp = spmv_float(x, y, val, P, num_vertices)
-    return alpha * xp + (alpha / num_vertices) * dangling_mass[None, :] \
-        + (1.0 - alpha) * Vmat
+    return _float_combine(xp, dangling_mass, Vmat,
+                          num_vertices=num_vertices, alpha=alpha)
 
 
 def _fixed_consts(fmt: QFormat, num_vertices: int, alpha: float):
@@ -76,17 +88,30 @@ def _fixed_consts(fmt: QFormat, num_vertices: int, alpha: float):
             np.uint32(int(alpha / num_vertices * fmt.scale)))
 
 
-def _fixed_iteration(x, y, val_raw, d_raw, Vmat, P, *, fmt: QFormat,
-                     num_vertices: int, alpha_raw, one_minus_alpha_raw,
-                     alpha_over_v_raw):
-    # dangling mass: Σ_{i dangling} P[i,k]  (raw-domain exact sum)
-    dangling_mass = (d_raw[:, None] * P).astype(jnp.int32).sum(0).astype(jnp.uint32)
-    xp = spmv_fixed(x, y, val_raw, P, num_vertices, fmt)
+def _fixed_dangling_mass(d_raw, P):
+    """Σ_{i dangling} P[i,k] — raw-domain exact sum, [K]."""
+    return (d_raw[:, None] * P).astype(jnp.int32).sum(0).astype(jnp.uint32)
+
+
+def _fixed_combine(xp, dangling_mass, Vmat, *, fmt: QFormat, alpha_raw,
+                   one_minus_alpha_raw, alpha_over_v_raw):
+    """eq. (1) combine in the raw domain — truncating multiplies, saturating
+    adds; shared by the single-device and sharded steps (bit-identical)."""
     return fmt.add(
         fmt.add(fmt.mul(jnp.asarray(alpha_raw), xp),
                 fmt.mul(jnp.asarray(alpha_over_v_raw), dangling_mass)[None, :]),
         fmt.mul(jnp.asarray(one_minus_alpha_raw), Vmat),
     )
+
+
+def _fixed_iteration(x, y, val_raw, d_raw, Vmat, P, *, fmt: QFormat,
+                     num_vertices: int, alpha_raw, one_minus_alpha_raw,
+                     alpha_over_v_raw):
+    dangling_mass = _fixed_dangling_mass(d_raw, P)
+    xp = spmv_fixed(x, y, val_raw, P, num_vertices, fmt)
+    return _fixed_combine(xp, dangling_mass, Vmat, fmt=fmt, alpha_raw=alpha_raw,
+                          one_minus_alpha_raw=one_minus_alpha_raw,
+                          alpha_over_v_raw=alpha_over_v_raw)
 
 
 # ----------------------------------------------------------------------------
@@ -114,6 +139,56 @@ def make_ppr_fixed_step(fmt: QFormat, num_vertices: int, alpha: float):
             x, y, val_raw, dangling.astype(jnp.uint32), Vmat, P,
             fmt=fmt, num_vertices=num_vertices, alpha_raw=a_raw,
             one_minus_alpha_raw=oma_raw, alpha_over_v_raw=aov_raw)
+
+    return step
+
+
+# ----------------------------------------------------------------------------
+# sharded step API — one eq. (1) iteration over a mesh-partitioned edge stream
+# ----------------------------------------------------------------------------
+@functools.lru_cache(maxsize=32)
+def make_ppr_sharded_float_step(mesh, axis: str, num_vertices: int, alpha: float):
+    """Jitted float32 single iteration whose SpMV runs over a ``jax.sharding``
+    mesh (edges pre-partitioned by dst range — ``partition_edges_by_dst``).
+
+    Dangling mass and the eq. (1) combine are computed on the replicated [V, K]
+    state with the exact same ops as ``ppr_step_float`` (``_float_combine``), so
+    any numeric divergence from the single-device step can only come from the
+    per-shard SpMV accumulation order.
+    """
+    spmv = make_sharded_spmv(mesh, axis, num_vertices)
+
+    @jax.jit
+    def step(x: Array, y: Array, val: Array, dangling: Array,
+             Vmat: Array, P: Array) -> Array:
+        d = dangling.astype(jnp.float32)
+        dangling_mass = d @ P
+        xp = spmv(x, y, val, P)
+        return _float_combine(xp, dangling_mass, Vmat,
+                              num_vertices=num_vertices, alpha=alpha)
+
+    return step
+
+
+@functools.lru_cache(maxsize=32)
+def make_ppr_sharded_fixed_step(fmt: QFormat, mesh, axis: str,
+                                num_vertices: int, alpha: float):
+    """Jitted bit-exact fixed-point single iteration over a mesh.
+
+    Per-shard raw accumulation is exact and each dst row lives on exactly one
+    shard, so the result is *bit-identical* to ``make_ppr_fixed_step`` — the
+    sharded fixed path inherits the single-device path's determinism.
+    """
+    a_raw, oma_raw, aov_raw = _fixed_consts(fmt, num_vertices, alpha)
+    spmv = make_sharded_spmv_fixed(mesh, axis, num_vertices, fmt)
+
+    @jax.jit
+    def step(x: Array, y: Array, val_raw: Array, dangling: Array,
+             Vmat: Array, P: Array) -> Array:
+        dangling_mass = _fixed_dangling_mass(dangling.astype(jnp.uint32), P)
+        xp = spmv(x, y, val_raw, P)
+        return _fixed_combine(xp, dangling_mass, Vmat, fmt=fmt, alpha_raw=a_raw,
+                              one_minus_alpha_raw=oma_raw, alpha_over_v_raw=aov_raw)
 
     return step
 

@@ -14,10 +14,13 @@ Paths
                        dp_buffer multiply truncates and the aggregator adds raw.
 3. ``spmv_pallas``     the Pallas TPU kernel (repro.kernels.coo_spmv) over the
                        2-D BlockedCOO layout.
-4. ``spmv_sharded``    shard_map multi-device: edges partitioned by dst range,
-                       P_t all-gathered over the mesh axis, each device produces
-                       its dst slice — the paper's "partitioning techniques
-                       [18, 20]" integrated as a first-class feature.
+4. sharded             shard_map multi-device (``make_sharded_spmv`` float /
+                       ``make_sharded_spmv_fixed`` bit-exact raw uint32): edges
+                       partitioned by dst range on the ceil-division padded
+                       layout of ``sharded_vertex_layout``, P_t all-gathered
+                       over the mesh axis, each device produces its dst slice —
+                       the paper's "partitioning techniques [18, 20]" integrated
+                       as a first-class feature.
 """
 from __future__ import annotations
 
@@ -77,44 +80,95 @@ def spmv_pallas(blocked, p: Array, *, interpret: bool = True) -> Array:
 # ----------------------------------------------------------------------------
 # 4. sharded path (graph partitioned by destination range)
 # ----------------------------------------------------------------------------
+def sharded_vertex_layout(num_vertices: int, n_shards: int) -> tuple:
+    """(v_local, v_padded) of the ceil-division dst layout shared by the
+    partitioner and every sharded kernel: each shard owns ``v_local =
+    ceil(V / n_shards)`` destination rows, the concatenated output covers
+    ``v_padded = n_shards · v_local ≥ V`` rows, and the ``v_padded − V``
+    phantom rows of the last shard receive no edges (they are sliced away
+    before anything downstream sees them)."""
+    v_local = -(-num_vertices // n_shards)
+    return v_local, n_shards * v_local
+
+
 def make_sharded_spmv(mesh, axis: str, num_vertices: int):
     """Build a shard_map SpMV: edges pre-partitioned by dst into len(axis) shards.
 
     Each device holds an equal-size (padded) edge shard whose x all fall in its
     dst range, plus the full P (replicated via all-gather by the in_spec).  Output
-    is the device's dst slice — concatenated by the out_spec.  Collective cost:
+    is the device's dst slice — concatenated by the out_spec and sliced back to
+    ``num_vertices`` rows (the ceil-division layout of ``sharded_vertex_layout``
+    pads the vertex space, so any V works on any shard count).  Collective cost:
     one all-gather of P per iteration = V·K·4 bytes — matches the paper's note
     that partitioned designs trade bandwidth for capacity.
     """
     n_shards = mesh.shape[axis]
-    if num_vertices % n_shards:
-        raise ValueError("num_vertices must divide the mesh axis for the demo path")
-    v_local = num_vertices // n_shards
+    v_local, _ = sharded_vertex_layout(num_vertices, n_shards)
 
     def local_spmv(x_loc, y, val, p):
         # x_loc already local to the shard's dst range; p is full (replicated).
         contrib = val[:, None] * p[y]
         return jax.ops.segment_sum(contrib, x_loc, num_segments=v_local)
 
-    return shard_map(
+    sharded = shard_map(
         local_spmv,
         mesh=mesh,
         in_specs=(P(axis), P(axis), P(axis), P()),
         out_specs=P(axis),
     )
 
+    def spmv(x, y, val, p):
+        return sharded(x, y, val, p)[:num_vertices]
+
+    return spmv
+
+
+def make_sharded_spmv_fixed(mesh, axis: str, num_vertices: int, fmt: QFormat):
+    """Sharded counterpart of ``spmv_fixed``: raw uint32 domain, truncating
+    ``fmt.mul`` per edge, exact raw-domain accumulation per shard.
+
+    Integer accumulation is exact and order-independent, so the concatenated
+    result is *bit-identical* to single-device ``spmv_fixed`` — partitioning
+    only splits each destination row's sum into per-shard partial sums that
+    never mix (each dst row lives on exactly one shard).
+    """
+    n_shards = mesh.shape[axis]
+    v_local, _ = sharded_vertex_layout(num_vertices, n_shards)
+
+    def local_spmv(x_loc, y, val_raw, p_raw):
+        prod = fmt.mul(val_raw[:, None], p_raw[y])
+        acc = jax.ops.segment_sum(prod.astype(jnp.int32), x_loc,
+                                  num_segments=v_local)
+        return acc.astype(jnp.uint32)
+
+    sharded = shard_map(
+        local_spmv,
+        mesh=mesh,
+        in_specs=(P(axis), P(axis), P(axis), P()),
+        out_specs=P(axis),
+    )
+
+    def spmv(x, y, val_raw, p_raw):
+        return sharded(x, y, val_raw, p_raw)[:num_vertices]
+
+    return spmv
+
 
 def partition_edges_by_dst(x, y, val, num_vertices: int, n_shards: int, packet: int = 256):
     """Host-side: bucket edges by dst range and pad each shard to equal length.
 
-    Ranges are ceil(num_vertices / n_shards) wide, so when num_vertices does not
+    Ranges are ceil(num_vertices / n_shards) wide — ``sharded_vertex_layout``,
+    the same layout the sharded kernels consume — so when num_vertices does not
     divide evenly the remainder vertices land in the (short) last shard instead
-    of a phantom shard ``n_shards`` whose edges were silently dropped.  The
-    divisible case is unchanged and matches ``make_sharded_spmv``'s layout.
+    of a phantom shard ``n_shards`` whose edges were silently dropped.
+
+    ``val``'s dtype is preserved (float32 edge weights and raw uint32 quantized
+    values partition through the same code path; pad edges carry val=0, which
+    contributes nothing in either domain).
     """
     import numpy as np
 
-    v_local = -(-num_vertices // n_shards)
+    v_local, _ = sharded_vertex_layout(num_vertices, n_shards)
     shard_of = np.asarray(x) // v_local
     shards = []
     max_e = 0
@@ -125,10 +179,10 @@ def partition_edges_by_dst(x, y, val, num_vertices: int, n_shards: int, packet: 
         vs = np.asarray(val)[m]
         shards.append((xs, ys, vs))
         max_e = max(max_e, xs.shape[0])
-    max_e = (max_e + packet - 1) // packet * packet
+    max_e = max(packet, (max_e + packet - 1) // packet * packet)
     X = np.zeros((n_shards, max_e), np.int32)
     Y = np.zeros((n_shards, max_e), np.int32)
-    V = np.zeros((n_shards, max_e), np.float32)
+    V = np.zeros((n_shards, max_e), np.asarray(val).dtype)
     for s, (xs, ys, vs) in enumerate(shards):
         X[s, : xs.shape[0]] = xs
         Y[s, : ys.shape[0]] = ys

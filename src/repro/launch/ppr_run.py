@@ -6,20 +6,24 @@
 Reproduces the paper's §5.1 protocol: compute PPR for N random personalization
 vertices in κ-sized batches, at a chosen fixed-point bit-width, and score the
 rankings against the float64 CPU oracle at convergence (§5.3 metrics).
+
+``--serve`` routes the same workload through ``PPRService`` (κ-batched waves,
+top-K, telemetry) instead of the raw ``batched_ppr`` loop; ``--shards N``
+additionally registers the graph on an N-way ``jax.sharding`` mesh so waves
+run the sharded step bodies — the multi-host serving path.  When fewer than N
+devices are visible, N host devices are forced (CPU demo of the layout; on a
+real platform the flag is a no-op because devices are already there):
+
+    PYTHONPATH=src python -m repro.launch.ppr_run --serve --shards 4
 """
 from __future__ import annotations
 
 import argparse
+import os
 import time
 
-import numpy as np
 
-from repro.core import PPRConfig, batched_ppr, format_for_bits
-from repro.core.metrics import aggregate_reports, full_report
-from repro.graphs import paper_graph_suite, ppr_reference
-
-
-def main():
+def _parse_args(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--graph", default="pl_1e5")
     ap.add_argument("--scale", type=float, default=0.02,
@@ -31,7 +35,33 @@ def main():
     ap.add_argument("--alpha", type=float, default=0.85)
     ap.add_argument("--float", dest="use_float", action="store_true",
                     help="run the F32 reference architecture instead")
-    args = ap.parse_args()
+    ap.add_argument("--serve", action="store_true",
+                    help="route through PPRService (waves, top-K, telemetry)")
+    ap.add_argument("--shards", type=int, default=1,
+                    help="with --serve: register the graph on an N-way mesh "
+                         "(N>1 implies the sharded step bodies)")
+    ap.add_argument("--topk", type=int, default=10,
+                    help="with --serve: recommendations per query")
+    return ap.parse_args(argv)
+
+
+def main():
+    args = _parse_args()
+    if args.shards > 1:
+        # must be set before the jax backend initializes; harmless when enough
+        # real devices exist or the backend already came up (_serve then
+        # reports the actual device shortfall with a remedy)
+        flags = os.environ.get("XLA_FLAGS", "")
+        if "--xla_force_host_platform_device_count" not in flags:
+            os.environ["XLA_FLAGS"] = (
+                f"{flags} --xla_force_host_platform_device_count={args.shards}"
+            ).strip()
+
+    import numpy as np
+
+    from repro.core import PPRConfig, batched_ppr, format_for_bits
+    from repro.core.metrics import aggregate_reports, full_report
+    from repro.graphs import paper_graph_suite, ppr_reference
 
     suite = paper_graph_suite(scale=args.scale)
     g = suite[args.graph]
@@ -41,21 +71,73 @@ def main():
     vertices = rng.integers(0, g.num_vertices, args.requests)
     cfg = PPRConfig(alpha=args.alpha, iterations=args.iterations, kappa=args.kappa)
     fmt = None if args.use_float else format_for_bits(args.bits)
-
-    t0 = time.time()
-    scores = batched_ppr(g, vertices, cfg, fmt=fmt)
-    dt = time.time() - t0
     label = "float32" if fmt is None else fmt.name
-    print(f"{label}: {args.requests} requests in {dt:.3f}s "
-          f"({args.requests/dt:.1f} req/s, κ={args.kappa})")
 
+    if args.serve or args.shards > 1:
+        scores = _serve(args, g, vertices, fmt, label)
+    else:
+        t0 = time.time()
+        scores = batched_ppr(g, vertices, cfg, fmt=fmt)
+        dt = time.time() - t0
+        print(f"{label}: {args.requests} requests in {dt:.3f}s "
+              f"({args.requests/dt:.1f} req/s, κ={args.kappa})")
+
+    if scores is None:
+        return
     # accuracy vs converged CPU oracle (paper §5.3: ≥100 iterations)
-    ref = ppr_reference(g, vertices[:8], alpha=args.alpha, iterations=100)
-    reports = [full_report(scores[:, i], ref[:, i]) for i in range(8)]
+    n_acc = min(8, args.requests)
+    ref = ppr_reference(g, vertices[:n_acc], alpha=args.alpha, iterations=100)
+    reports = [full_report(scores[:, i], ref[:, i]) for i in range(n_acc)]
     agg = aggregate_reports(reports)
-    print("accuracy vs CPU oracle (first 8 requests):")
+    print(f"accuracy vs CPU oracle (first {n_acc} requests):")
     for k in ["ndcg", "edit@10", "edit@20", "errors@10", "precision@50", "kendall@50", "mae"]:
         print(f"  {k:14s} {agg[k]:.5f}")
+
+
+def _serve(args, g, vertices, fmt, label):
+    """PPRService path: waves + top-K + telemetry, optionally mesh-sharded.
+
+    Returns None (skipping the dense-score oracle comparison): the service
+    returns ranked top-K results, not dense score matrices, and its numeric
+    parity with the direct path is covered by tests/test_sharded_serving.py.
+    This driver reports serving throughput and per-mesh wave telemetry."""
+    import jax
+    import numpy as np
+
+    from repro.ppr_serving import PPRQuery, PPRService
+
+    mesh = None
+    if args.shards > 1:
+        if jax.device_count() < args.shards:
+            raise SystemExit(
+                f"--shards {args.shards} needs {args.shards} devices, have "
+                f"{jax.device_count()} (the jax backend initialized before "
+                f"this driver could force host devices — set XLA_FLAGS="
+                f"--xla_force_host_platform_device_count={args.shards} "
+                f"up front)")
+        mesh = jax.make_mesh((args.shards,), ("shard",))
+    svc = PPRService(kappa=args.kappa, iterations=args.iterations,
+                     alpha=args.alpha, cache_capacity=0)      # measure compute
+    svc.register_graph(args.graph, g,
+                       formats=[] if fmt is None else [fmt], mesh=mesh)
+    precision = None if fmt is None else fmt.name
+    queries = [PPRQuery(args.graph, int(v), k=args.topk, precision=precision)
+               for v in vertices]
+    svc.serve(queries[: min(args.kappa, len(queries))])       # warm up jit
+    svc.telemetry.reset()              # report only the timed traffic
+    t0 = time.time()
+    recs = svc.serve(queries)
+    dt = time.time() - t0
+    where = "single-device" if mesh is None else f"{args.shards}-shard mesh"
+    print(f"{label} via PPRService on {where}: {len(recs)} queries in {dt:.3f}s "
+          f"({len(recs)/dt:.1f} req/s, κ={args.kappa}, top-{args.topk})")
+    t = svc.telemetry_summary()
+    for k in sorted(t):
+        if k.startswith(("waves", "queries_", "wave_latency", "mean_occ")):
+            v = t[k]
+            print(f"  {k:28s} {v:.5f}" if isinstance(v, float) else
+                  f"  {k:28s} {v}")
+    return None
 
 
 if __name__ == "__main__":

@@ -38,19 +38,30 @@ The adaptive-precision subsystem (repro.autotune) plugs in here:
 per-query quality target before wave admission, waves early-exit at the
 fixed-point absorbing state (paper Fig. 7), and a sampled fraction of served
 auto queries is shadow-scored against a float32 reference to keep the
-controller honest.  Remaining follow-ons (ROADMAP open items): multi-host
-sharded serving (route waves to spmv_sharded meshes), async prefetch of hot
-personalization vertices into the cache.
+controller honest.
+
+Multi-host sharded serving: ``register_graph(..., mesh=...)`` partitions the
+edge stream by destination range over a ``jax.sharding.Mesh`` axis at
+registration (``ShardedRegisteredGraph``) and routes the graph's waves through
+the sharded step bodies of ``repro.core.ppr`` — wave keys are
+``(graph, precision, mesh_key)``, so meshed and single-device traffic never
+mix in one wave, and telemetry counts waves/queries per mesh layout.  The
+fixed-point sharded path is bit-identical to single-device serving (raw-domain
+accumulation is exact); the float path is numerically equal.  Remaining
+follow-on (ROADMAP open item): async prefetch of hot personalization vertices
+into the cache.
 """
 from repro.ppr_serving.cache import LRUCache
 from repro.ppr_serving.scheduler import Wave, WaveScheduler
 from repro.ppr_serving.service import (
     AUTO_KEY,
     FLOAT_KEY,
+    SINGLE_DEVICE_KEY,
     PPRQuery,
     PPRService,
     Recommendation,
     RegisteredGraph,
+    ShardedRegisteredGraph,
     normalize_precision,
     precision_key,
 )
@@ -59,7 +70,9 @@ from repro.ppr_serving.topk import topk_dense, topk_streaming
 
 __all__ = [
     "PPRService", "PPRQuery", "Recommendation", "RegisteredGraph",
+    "ShardedRegisteredGraph",
     "normalize_precision", "precision_key", "AUTO_KEY", "FLOAT_KEY",
+    "SINGLE_DEVICE_KEY",
     "WaveScheduler", "Wave",
     "LRUCache", "ServiceTelemetry",
     "topk_dense", "topk_streaming",

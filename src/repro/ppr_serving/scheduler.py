@@ -2,8 +2,9 @@
 
 Mirrors ``repro.serving.engine``'s slot batcher, specialized for PPR: one wave
 amortizes a full edge-stream pass over up to κ personalization vertices, so
-admission fills waves per (graph, precision) key — queries on different graphs
-or Q formats cannot share a stream and therefore never share a wave.
+admission fills waves per (graph, precision, mesh) key — queries on different
+graphs, Q formats, or mesh layouts cannot share a stream and therefore never
+share a wave.
 
 Flush policy (deadline-aware): a full wave of κ launches immediately; a
 partially-full wave launches once *any* occupant has waited out its admission
@@ -32,8 +33,8 @@ class _Pending:
 
 @dataclasses.dataclass
 class Wave:
-    """One κ-batched launch: all items share a (graph, precision) stream."""
-    key: Hashable                  # (graph, precision) in the PPR service
+    """One κ-batched launch: all items share a (graph, precision, mesh) stream."""
+    key: Hashable                  # (graph, precision, mesh_key) in the PPR service
     items: List[Any]
     full: bool                     # False ⇒ deadline-flushed partial wave
 

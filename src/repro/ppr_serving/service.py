@@ -1,8 +1,9 @@
 """`PPRService` — the multi-tenant query-serving facade over the numeric core.
 
 Lifecycle: graphs are registered once (host arrays moved to device, edge
-stream padded to packets, per-format quantized values cached), then queries
-flow through
+stream padded to packets, per-format quantized values cached; with ``mesh=``
+additionally partitioned by destination range over a mesh axis for
+multi-device serving), then queries flow through
 
     submit → precision resolution ("auto" → controller) → result cache probe
            → κ-batch scheduler → wave launch → step-driven PPR iterations
@@ -40,14 +41,17 @@ from repro.core.fixed_point import PAPER_FORMATS, QFormat, format_for_bits
 from repro.core.metrics import ranking
 from repro.core.ppr import (
     make_ppr_fixed_step,
+    make_ppr_sharded_fixed_step,
+    make_ppr_sharded_float_step,
     personalization_matrix,
     personalization_matrix_fixed,
     ppr_float,
     ppr_step_float,
 )
+from repro.core.spmv import partition_edges_by_dst
 from repro.ppr_serving.cache import LRUCache
 from repro.ppr_serving.scheduler import Wave, WaveScheduler
-from repro.ppr_serving.telemetry import ServiceTelemetry
+from repro.ppr_serving.telemetry import SINGLE_DEVICE_KEY, ServiceTelemetry
 from repro.ppr_serving.topk import topk_dense, topk_streaming
 
 Precision = Union[None, int, str, QFormat]
@@ -73,9 +77,12 @@ def normalize_precision(precision: Precision) -> Optional[QFormat]:
     if isinstance(precision, str):
         if precision in PAPER_FORMATS:
             return PAPER_FORMATS[precision]
-        if precision.startswith("Q") and "." in precision:
+        if precision.startswith("Q") and precision.count(".") == 1:
             i, f = precision[1:].split(".")
-            return QFormat(int(i), int(f))
+            try:
+                return QFormat(int(i), int(f))
+            except ValueError:
+                pass   # malformed digits ("Q1.25x") → the descriptive error
     raise ValueError(f"unknown precision spec: {precision!r}")
 
 
@@ -116,22 +123,135 @@ class Recommendation:
 
 
 class RegisteredGraph:
-    """Device-resident graph state, prepared once at registration."""
+    """Device-resident graph state, prepared once at registration.
+
+    The full-layout edge stream (``x``/``y``/``val``) is uploaded eagerly —
+    every single-device wave reads it.  ``ShardedRegisteredGraph`` defers that
+    upload: its waves read only the partitioned shards, and the full layout is
+    materialized lazily iff something actually needs it (the float32 shadow
+    reference for sampled ``precision="auto"`` traffic) — a meshed graph is
+    registered precisely because one device's memory is tight."""
+
+    mesh_key = SINGLE_DEVICE_KEY   # waves on this graph run single-device
+
+    _defer_full_upload = False
 
     def __init__(self, name: str, g: COOGraph, packet: int = 256):
         self.name = name
         self.graph = g.pad_to_packets(packet)
         self.num_vertices = g.num_vertices
-        self.x = jnp.asarray(self.graph.x)
-        self.y = jnp.asarray(self.graph.y)
-        self.val = jnp.asarray(self.graph.val)
         self.dangling = jnp.asarray(self.graph.dangling)
+        self._full_device: Optional[Tuple[jnp.ndarray, ...]] = None
         self._quantized: Dict[QFormat, jnp.ndarray] = {}
+        if not self._defer_full_upload:
+            self._full()
+
+    def _full(self) -> Tuple[jnp.ndarray, ...]:
+        if self._full_device is None:
+            self._full_device = (jnp.asarray(self.graph.x),
+                                 jnp.asarray(self.graph.y),
+                                 jnp.asarray(self.graph.val))
+        return self._full_device
+
+    @property
+    def x(self) -> jnp.ndarray:
+        return self._full()[0]
+
+    @property
+    def y(self) -> jnp.ndarray:
+        return self._full()[1]
+
+    @property
+    def val(self) -> jnp.ndarray:
+        return self._full()[2]
 
     def quantized(self, fmt: QFormat) -> jnp.ndarray:
         if fmt not in self._quantized:
             self._quantized[fmt] = jnp.asarray(self.graph.quantized_val(fmt))
         return self._quantized[fmt]
+
+    # ---- wave step construction (overridden by the sharded variant) -------
+    def float_step(self, alpha: float):
+        """callable(Vmat, P) → P_next for one float32 eq. (1) iteration."""
+        def step(Vmat, P):
+            return ppr_step_float(self.x, self.y, self.val, self.dangling,
+                                  Vmat, P, num_vertices=self.num_vertices,
+                                  alpha=alpha)
+        return step
+
+    def fixed_step(self, fmt: QFormat, alpha: float):
+        """callable(Vmat, P) → P_next, bit-exact in ``fmt``'s raw domain."""
+        body = make_ppr_fixed_step(fmt, self.num_vertices, alpha)
+        val_raw = self.quantized(fmt)
+
+        def step(Vmat, P):
+            return body(self.x, self.y, val_raw, self.dangling, Vmat, P)
+        return step
+
+
+class ShardedRegisteredGraph(RegisteredGraph):
+    """A registered graph whose edge stream is partitioned over a
+    ``jax.sharding.Mesh`` axis (the paper's multi-channel partitioning, scaled
+    to multi-device): waves on it run the sharded step bodies of
+    ``repro.core.ppr``.
+
+    The host owns the partitioning/packaging step (the CPU–FPGA synergy
+    argument of arXiv 2004.13907): edges are bucketed by destination range
+    once at registration — per quantized format too, through the same
+    dtype-preserving partitioner, so fixed-point shards are the exact raw
+    values the single-device path would stream.  The base class's full-layout
+    device arrays are deferred (see its docstring): only the float32 shadow
+    reference materializes them, on first sampled auto query.
+    """
+
+    _defer_full_upload = True
+
+    def __init__(self, name: str, g: COOGraph, mesh, axis: Optional[str] = None,
+                 packet: int = 256):
+        super().__init__(name, g, packet=packet)
+        self.mesh = mesh
+        self.axis = axis if axis is not None else mesh.axis_names[0]
+        if self.axis not in mesh.axis_names:
+            raise ValueError(f"mesh has no axis {self.axis!r} "
+                             f"(axes: {mesh.axis_names})")
+        self.n_shards = int(mesh.shape[self.axis])
+        self.mesh_key = f"mesh:{self.axis}x{self.n_shards}"
+        self._packet = packet
+        sx, sy, sval = partition_edges_by_dst(
+            self.graph.x, self.graph.y, self.graph.val,
+            self.num_vertices, self.n_shards, packet=packet)
+        self.sharded_x = jnp.asarray(sx)
+        self.sharded_y = jnp.asarray(sy)
+        self.sharded_val = jnp.asarray(sval)
+        self._sharded_quantized: Dict[QFormat, jnp.ndarray] = {}
+
+    def sharded_quantized(self, fmt: QFormat) -> jnp.ndarray:
+        """Raw uint32 edge shard values in the partitioned layout (cached)."""
+        if fmt not in self._sharded_quantized:
+            _, _, sval = partition_edges_by_dst(
+                self.graph.x, self.graph.y, self.graph.quantized_val(fmt),
+                self.num_vertices, self.n_shards, packet=self._packet)
+            self._sharded_quantized[fmt] = jnp.asarray(sval)
+        return self._sharded_quantized[fmt]
+
+    def float_step(self, alpha: float):
+        body = make_ppr_sharded_float_step(self.mesh, self.axis,
+                                           self.num_vertices, alpha)
+
+        def step(Vmat, P):
+            return body(self.sharded_x, self.sharded_y, self.sharded_val,
+                        self.dangling, Vmat, P)
+        return step
+
+    def fixed_step(self, fmt: QFormat, alpha: float):
+        body = make_ppr_sharded_fixed_step(fmt, self.mesh, self.axis,
+                                           self.num_vertices, alpha)
+        val_raw = self.sharded_quantized(fmt)
+
+        def step(Vmat, P):
+            return body(self.sharded_x, self.sharded_y, val_raw,
+                        self.dangling, Vmat, P)
+        return step
 
 
 class PPRService:
@@ -169,8 +289,16 @@ class PPRService:
     # ------------------------------------------------------------------
     def register_graph(self, name: str, g: COOGraph,
                        formats: Sequence[Precision] = (),
-                       packet: int = 256) -> RegisteredGraph:
+                       packet: int = 256,
+                       mesh=None, mesh_axis: Optional[str] = None
+                       ) -> RegisteredGraph:
         """Move a graph to the device; optionally pre-quantize for ``formats``.
+
+        ``mesh`` (a ``jax.sharding.Mesh``) registers the graph *sharded*: the
+        edge stream is partitioned by destination range over ``mesh_axis``
+        (default: the mesh's first axis) at registration, and every wave on
+        the graph runs the sharded step bodies — same results, multi-device
+        bandwidth.  ``num_vertices`` need not divide the shard count.
 
         Re-registering an existing name invalidates that graph's cached
         results, drops its still-pending queries (they were validated against
@@ -182,11 +310,20 @@ class PPRService:
             self.cache.invalidate(lambda key: key[0] == name)
             self.scheduler.purge(lambda key: key[0] == name)
             self.controller.forget_graph(name)
-        rg = RegisteredGraph(name, g, packet=packet)
+        if mesh is None:
+            rg: RegisteredGraph = RegisteredGraph(name, g, packet=packet)
+        else:
+            rg = ShardedRegisteredGraph(name, g, mesh, axis=mesh_axis,
+                                        packet=packet)
         for p in formats:
             fmt = normalize_precision(p)
             if fmt is not None:
-                rg.quantized(fmt)
+                # sharded waves read only the partitioned quantized values —
+                # skip the full-layout device upload for meshed graphs
+                if isinstance(rg, ShardedRegisteredGraph):
+                    rg.sharded_quantized(fmt)
+                else:
+                    rg.quantized(fmt)
         self._graphs[name] = rg
         return rg
 
@@ -212,12 +349,26 @@ class PPRService:
                 int(self.iterations), self.convergence is not None)
 
     def submit(self, q: PPRQuery) -> Optional[Recommendation]:
-        """Cache probe; on miss, enqueue for the next wave and return None."""
+        """Cache probe; on miss, enqueue for the next wave and return None.
+
+        Validation happens *here*, not at wave launch: an invalid ``k`` that
+        only surfaced inside the wave's top-K (``k+1 > V``) would crash
+        ``pump()`` and lose every co-batched query's result — one bad query
+        must never poison a wave."""
         if q.graph not in self._graphs:
             raise KeyError(f"graph {q.graph!r} is not registered "
                            f"(have {list(self._graphs)})")
-        if not 0 <= q.vertex < self._graphs[q.graph].num_vertices:
+        rg = self._graphs[q.graph]
+        if not 0 <= q.vertex < rg.num_vertices:
             raise ValueError(f"vertex {q.vertex} out of range for {q.graph!r}")
+        if q.k < 1:
+            raise ValueError(f"k must be >= 1, got {q.k}")
+        if q.k > rg.num_vertices - 1:
+            # self-exclusion means at most V-1 recommendable vertices
+            raise ValueError(
+                f"k={q.k} exceeds the {rg.num_vertices - 1} recommendable "
+                f"vertices of {q.graph!r} (|V|={rg.num_vertices}, the query "
+                f"vertex excludes itself)")
         pkey = self._resolve_precision(q)
         hit = self.cache.get(self._cache_key(q, pkey))
         self.telemetry.record_cache(hit is not None)
@@ -225,7 +376,8 @@ class PPRService:
             verts, scores = hit
             return Recommendation(q, verts.copy(), scores.copy(),
                                   source="cache", precision=pkey)
-        self.scheduler.submit((q.graph, pkey), q, deadline=q.deadline)
+        self.scheduler.submit((q.graph, pkey, rg.mesh_key), q,
+                              deadline=q.deadline)
         return None
 
     def pump(self, now: Optional[float] = None) -> List[Recommendation]:
@@ -290,11 +442,12 @@ class PPRService:
                 P = step(P)
             return P, self.iterations
         P, iters_run, _ = run_until_converged(
-            step, P0, self.iterations, self.convergence, fixed=fixed, scale=scale)
+            step, P0, self.iterations, self.convergence, fixed=fixed,
+            scale=scale, track_deltas=False)   # trace unused: skip its syncs
         return P, iters_run
 
     def _run_wave(self, wave: Wave) -> List[Recommendation]:
-        graph_name, pkey = wave.key
+        graph_name, pkey, mesh_key = wave.key
         rg = self._graphs[graph_name]
         fmt = None if pkey == FLOAT_KEY else normalize_precision(pkey)
         t0 = self.time_fn()
@@ -306,20 +459,17 @@ class PPRService:
         padded = verts + [verts[0]] * pad           # pad columns are discarded
         pers = jnp.asarray(np.asarray(padded, np.int32))
 
+        # the graph decides how its waves iterate: single-device or mesh-sharded
         if fmt is None:
             Vmat = personalization_matrix(rg.num_vertices, pers)
+            step = rg.float_step(self.alpha)
             P, iters_run = self._iterate(
-                lambda P: ppr_step_float(rg.x, rg.y, rg.val, rg.dangling, Vmat,
-                                         P, num_vertices=rg.num_vertices,
-                                         alpha=self.alpha),
-                Vmat, fixed=False, scale=None)
+                lambda P_: step(Vmat, P_), Vmat, fixed=False, scale=None)
         else:
             Vmat = personalization_matrix_fixed(rg.num_vertices, pers, fmt)
-            step = make_ppr_fixed_step(fmt, rg.num_vertices, self.alpha)
-            val_raw = rg.quantized(fmt)
+            step = rg.fixed_step(fmt, self.alpha)
             P, iters_run = self._iterate(
-                lambda P_: step(rg.x, rg.y, val_raw, rg.dangling, Vmat, P_),
-                Vmat, fixed=True, scale=fmt.scale)
+                lambda P_: step(Vmat, P_), Vmat, fixed=True, scale=fmt.scale)
         if iters_run < self.iterations:
             self.telemetry.record_early_exit(self.iterations - iters_run)
 
@@ -345,7 +495,8 @@ class PPRService:
             recs.append(Recommendation(q, v_top, s_top, source="wave",
                                        wave_id=wave_id, latency_s=latency,
                                        precision=pkey))
-        self.telemetry.record_wave(len(wave.items), self.kappa, latency, pkey)
+        self.telemetry.record_wave(len(wave.items), self.kappa, latency, pkey,
+                                   mesh_key=mesh_key)
         self._shadow_feedback(wave, rg, fmt, pkey, P)
         return recs
 
@@ -380,9 +531,21 @@ class PPRService:
             return
         pers_sub = jnp.asarray(
             np.asarray([int(q.vertex) for _, q in sampled], np.int32))
-        P_ref, _ = ppr_float(rg.x, rg.y, rg.val, rg.dangling, pers_sub,
-                             num_vertices=rg.num_vertices,
-                             iterations=self.iterations, alpha=self.alpha)
+        if isinstance(rg, ShardedRegisteredGraph):
+            # keep the reference on the mesh: running it through the full
+            # single-device stream would force the deferred full-layout
+            # upload onto one device — the memory pressure mesh registration
+            # exists to avoid.  The sharded float step is numerically equal
+            # to ppr_float (tests/test_sharded_serving.py).
+            Vref = personalization_matrix(rg.num_vertices, pers_sub)
+            ref_step = rg.float_step(self.alpha)
+            P_ref = Vref
+            for _ in range(self.iterations):
+                P_ref = ref_step(Vref, P_ref)
+        else:
+            P_ref, _ = ppr_float(rg.x, rg.y, rg.val, rg.dangling, pers_sub,
+                                 num_vertices=rg.num_vertices,
+                                 iterations=self.iterations, alpha=self.alpha)
         ref = np.asarray(P_ref, np.float64)
         approx = np.asarray(P, np.float64) / fmt.scale
         for j, (col, q) in enumerate(sampled):

@@ -19,15 +19,29 @@ from typing import Dict, List
 
 import numpy as np
 
+# Mesh-layout key for waves on graphs registered without a mesh.  Defined here
+# (the lowest layer that needs it) and re-exported by service.py; sharded
+# graphs use "mesh:<axis>x<n_shards>" keys instead.
+SINGLE_DEVICE_KEY = "single"
+
 
 class ServiceTelemetry:
     def __init__(self) -> None:
+        self.reset()
+
+    def reset(self) -> None:
+        """Zero every counter — e.g. after a jit warm-up pass, so measured
+        telemetry reflects only the timed traffic without re-registering
+        graphs (host-side partitioning and device uploads are not cheap)."""
         self.wave_latencies_s: List[float] = []
         self.wave_occupancies: List[float] = []
         self.wave_precisions: List[str] = []
         self.queries_served = 0
         self.cache_hits = 0
         self.cache_misses = 0
+        # multi-host sharded serving: which mesh layout served each wave
+        self.waves_by_mesh: Dict[str, int] = {}
+        self.queries_by_mesh: Dict[str, int] = {}
         # adaptive-precision subsystem (repro.autotune)
         self.served_by_precision: Dict[str, int] = {}
         self.auto_resolved: Dict[str, int] = {}
@@ -37,13 +51,16 @@ class ServiceTelemetry:
 
     # ------------------------------------------------------------------
     def record_wave(self, n_queries: int, kappa: int, latency_s: float,
-                    precision: str) -> None:
+                    precision: str, mesh_key: str = SINGLE_DEVICE_KEY) -> None:
         self.wave_latencies_s.append(float(latency_s))
         self.wave_occupancies.append(n_queries / float(kappa))
         self.wave_precisions.append(precision)
         self.queries_served += n_queries
         self.served_by_precision[precision] = \
             self.served_by_precision.get(precision, 0) + n_queries
+        self.waves_by_mesh[mesh_key] = self.waves_by_mesh.get(mesh_key, 0) + 1
+        self.queries_by_mesh[mesh_key] = \
+            self.queries_by_mesh.get(mesh_key, 0) + n_queries
 
     def record_cache(self, hit: bool) -> None:
         if hit:
@@ -99,4 +116,8 @@ class ServiceTelemetry:
             out[f"served_{pkey}"] = n
         for pkey, n in sorted(self.auto_resolved.items()):
             out[f"auto_{pkey}"] = n
+        for mkey, n in sorted(self.waves_by_mesh.items()):
+            out[f"waves_{mkey}"] = n
+        for mkey, n in sorted(self.queries_by_mesh.items()):
+            out[f"queries_{mkey}"] = n
         return out

@@ -256,6 +256,42 @@ def test_convergence_policy_validation():
         ConvergencePolicy(check_every=0)
 
 
+def test_fixed_strict_exit_exact_above_float32_mantissa():
+    """Regression: raw uint32 states >= 2^24 (scores >= 0.5 in Q1.25) differing
+    by one LSB alias to float32 delta == 0.0; the strict absorbing-state check
+    must use exact integer comparison, not the float delta."""
+    from repro.autotune.convergence import ConvergenceMonitor, wave_delta
+
+    scale = 1 << 25                                   # Q1.25
+    a = jnp.full((4, 2), np.uint32(1 << 24), jnp.uint32)
+    b = a.at[0, 0].add(np.uint32(1))                  # one LSB above 2^24
+    # the float statistic is blind to this change — that is the trap
+    assert wave_delta(b, a, scale=scale) == 0.0
+    mon = ConvergenceMonitor(ConvergencePolicy(min_iterations=1),
+                             fixed=True, scale=scale)
+    assert mon.update(b, a) is False                  # must NOT exit
+    assert not mon.converged
+    # a genuinely absorbing state still exits
+    mon2 = ConvergenceMonitor(ConvergencePolicy(min_iterations=1),
+                              fixed=True, scale=scale)
+    assert mon2.update(a, a) is True and mon2.converged
+
+
+def test_run_until_converged_not_fooled_by_float_delta_alias():
+    """A step that keeps moving by one LSB above 2^24 must burn the whole
+    budget — the old delta==0.0 check exited after the first pair and returned
+    a state that was not a fixed point."""
+    def step(P):
+        return P + np.uint32(1)
+
+    P0 = jnp.full((8, 2), np.uint32(1 << 24), jnp.uint32)
+    P, iters, _ = run_until_converged(
+        step, P0, 6, ConvergencePolicy(min_iterations=1),
+        fixed=True, scale=1 << 25)
+    assert iters == 6
+    np.testing.assert_array_equal(np.asarray(P), np.asarray(P0) + np.uint32(6))
+
+
 # ---------------------------------------------------------------------------
 # serving integration: precision="auto"
 # ---------------------------------------------------------------------------

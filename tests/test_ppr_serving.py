@@ -348,6 +348,52 @@ def test_service_rejects_unknown_graph_and_bad_vertex(graph):
         svc.submit(PPRQuery("g", graph.num_vertices))
 
 
+def test_submit_validates_k_so_one_bad_query_cannot_poison_a_wave(graph):
+    """Regression: k <= 0 or k >= V used to pass submit() and detonate inside
+    the wave's top-K (k+1 > V), crashing pump() and losing every co-batched
+    query's result.  Validation now happens at submit()."""
+    V = graph.num_vertices
+    svc = PPRService(kappa=4, iterations=5)
+    svc.register_graph("g", graph)
+    # three good queries enqueue...
+    for v in (3, 17, 42):
+        assert svc.submit(PPRQuery("g", v, k=10)) is None
+    # ...the bad ones are rejected at the door, in every invalid shape
+    for bad_k in (0, -7, V, V + 3):
+        with pytest.raises(ValueError, match="k"):
+            svc.submit(PPRQuery("g", 5, k=bad_k))
+    # the wave still launches and serves the good co-batched queries
+    recs = svc.drain()
+    assert len(recs) == 3 and all(r.source == "wave" for r in recs)
+    # boundary: k = V-1 (every vertex but the query itself) is admissible
+    svc2 = PPRService(kappa=1, iterations=2)
+    svc2.register_graph("g", graph)
+    rec = svc2.serve([PPRQuery("g", 0, k=V - 1)])[0]
+    assert rec.vertices.shape == (V - 1,)
+    assert 0 not in rec.vertices.tolist()
+
+
+def test_normalize_precision_malformed_q_strings_fail_descriptively():
+    """Regression: malformed "Q" strings used to raise the bare int() parse
+    error instead of the intended "unknown precision spec"."""
+    from repro.ppr_serving import normalize_precision
+    for bad in ("Q1.25x", "Q.5", "Q1.", "Qx.y", "Q1.2.3", "Q0.5"):
+        with pytest.raises(ValueError, match="unknown precision spec"):
+            normalize_precision(bad)
+    # well-formed specs still parse
+    assert normalize_precision("Q1.25").name == "Q1.25"
+    assert normalize_precision("Q2.14").name == "Q2.14"
+
+
+def test_format_for_bits_rejects_degenerate_widths():
+    """Regression: format_for_bits(0) used to fail with an opaque QFormat
+    construction error rather than naming the bad bit-width."""
+    for bits in (0, 1, -5):
+        with pytest.raises(ValueError, match="bit-width"):
+            format_for_bits(bits)
+    assert format_for_bits(26).name == "Q1.25"
+
+
 def test_service_mixed_graphs(graph):
     g2 = erdos_renyi(400, 2400, seed=9)
     svc = PPRService(kappa=2, iterations=8)
