@@ -1,0 +1,172 @@
+"""Dynamic-graph-updates benchmark: delta-apply latency, warm vs cold
+iterations-to-exit, and scoped vs whole-graph invalidation.
+
+Three measurement families, one row each per configuration:
+
+- ``apply_<n>``  host-merge + incremental device-refresh latency of an
+  n-edge delta against a live registered graph (pre-quantized at Q1.25, so
+  the incremental requantization path is part of the measurement).
+- ``warm_vs_cold``  iterations-to-exit under the convergence monitor for the
+  same post-delta query set, served by a warm-started service (seeded from
+  pre-delta converged columns) and a cold one — the paper's Fig. 7 early-exit
+  win compounded by delta ingestion.
+- ``scoped_invalidation``  cache entries dropped by a localized delta's
+  scoped invalidation vs the whole-graph flush re-registration would cost;
+  the row asserts the scoped drop is strictly smaller.
+
+    PYTHONPATH=src python benchmarks/bench_graph_updates.py [--scale 0.02] [--dry-run]
+
+``--dry-run`` is the CI smoke path (tiny graph, one delta size).  Output is
+the house ``name,us_per_call,derived`` CSV.
+"""
+from __future__ import annotations
+
+import argparse
+import time
+from typing import Dict, List
+
+import numpy as np
+
+from repro.graph_updates import localized_delta, random_delta
+from repro.graphs import holme_kim_powerlaw
+from repro.ppr_serving import PPRQuery, PPRService
+
+DELTA_SIZES = (16, 128, 1024)
+
+
+def _bench_apply(g, delta_sizes, reps: int, seed: int) -> List[Dict]:
+    rows: List[Dict] = []
+    for n_edges in delta_sizes:
+        svc = PPRService(kappa=8, iterations=5)
+        svc.register_graph("g", g, formats=[26])
+        rng = np.random.default_rng(seed)
+        # warm the merge path once (first call pays numpy internals)
+        svc.apply_delta("g", random_delta(g, rng, n_add=4, n_remove=2))
+        times = []
+        for _ in range(reps):
+            rg = svc.registered_graph("g")
+            d = random_delta(rg.source, rng, n_add=n_edges,
+                             n_remove=max(1, n_edges // 2))
+            t0 = time.perf_counter()
+            svc.apply_delta("g", d)
+            times.append(time.perf_counter() - t0)
+        rows.append({
+            "case": f"apply_{n_edges}",
+            "V": g.num_vertices,
+            "E": g.num_edges,
+            "delta_edges": n_edges + max(1, n_edges // 2),
+            "apply_ms_mean": float(np.mean(times) * 1e3),
+            "apply_ms_min": float(np.min(times) * 1e3),
+        })
+    return rows
+
+
+def _iters_run(svc, t_before: Dict, t_after: Dict) -> float:
+    """Mean iterations actually run per wave between two telemetry snapshots
+    (budget · waves − early-exit savings)."""
+    waves = t_after["waves"] - t_before["waves"]
+    if not waves:
+        return 0.0
+    saved = t_after["iterations_saved"] - t_before["iterations_saved"]
+    return (waves * svc.iterations - saved) / waves
+
+
+def _bench_warm_vs_cold(g, n_queries: int, iterations: int, seed: int) -> List[Dict]:
+    rng = np.random.default_rng(seed)
+    verts = rng.integers(0, g.num_vertices, n_queries)
+    services = {}
+    for label, warm in (("warm", True), ("cold", False)):
+        svc = PPRService(kappa=8, iterations=iterations, early_exit=True,
+                         warm_start=warm, cache_capacity=0)
+        svc.register_graph("g", g, formats=[26])
+        services[label] = svc
+        svc.serve([PPRQuery("g", int(v), k=10, precision=26) for v in verts])
+    delta = random_delta(g, np.random.default_rng(seed + 1),
+                         n_add=8, n_remove=4)
+    iters = {}
+    for label, svc in services.items():
+        svc.apply_delta("g", delta)
+        before = svc.telemetry_summary()
+        svc.serve([PPRQuery("g", int(v), k=10, precision=26) for v in verts])
+        iters[label] = _iters_run(svc, before, svc.telemetry_summary())
+    warm_t = services["warm"].telemetry_summary()
+    return [{
+        "case": "warm_vs_cold",
+        "V": g.num_vertices,
+        "queries": n_queries,
+        "budget": iterations,
+        "cold_iters_per_wave": iters["cold"],
+        "warm_iters_per_wave": iters["warm"],
+        "warm_start_waves": warm_t["warm_start_waves"],
+        "warm_start_iterations_saved": warm_t["warm_start_iterations_saved"],
+    }]
+
+
+def _bench_scoped_invalidation(g, n_queries: int, seed: int) -> List[Dict]:
+    rng = np.random.default_rng(seed)
+    verts = rng.choice(g.num_vertices, size=min(n_queries, g.num_vertices),
+                       replace=False)
+    svc = PPRService(kappa=8, iterations=5)
+    svc.register_graph("g", g, formats=[26])
+    svc.serve([PPRQuery("g", int(v), k=10, precision=26) for v in verts])
+    cached = svc.telemetry_summary()["lru_size"]
+    # low-connectivity endpoints keep the 1-hop frontier small (touching a
+    # hub would put its whole in-neighborhood in the frontier)
+    delta = localized_delta(g, rng, n_add=2, n_remove=1)
+    report = svc.apply_delta("g", delta)
+    dropped, retained = report["cache_dropped"], report["cache_retained"]
+    assert dropped < cached, (
+        f"scoped invalidation dropped every cached entry ({dropped}/{cached}) "
+        f"on a localized delta — scoping is broken")
+    return [{
+        "case": "scoped_invalidation",
+        "V": g.num_vertices,
+        "cached_before": int(cached),
+        "frontier_size": report["frontier_size"],
+        "scoped_dropped": int(dropped),
+        "scoped_retained": int(retained),
+        "whole_graph_would_drop": int(cached),
+    }]
+
+
+def run(scale: float = 0.02, n_queries: int = 48, iterations: int = 80,
+        delta_sizes=DELTA_SIZES, reps: int = 5, seed: int = 0) -> List[Dict]:
+    g = holme_kim_powerlaw(max(256, int(128000 * scale)), m=3, seed=1)
+    rows = _bench_apply(g, delta_sizes, reps, seed)
+    rows += _bench_warm_vs_cold(g, n_queries, iterations, seed)
+    rows += _bench_scoped_invalidation(g, n_queries, seed)
+    return rows
+
+
+def main(scale: float = 0.02, dry_run: bool = False) -> List[Dict]:
+    if dry_run:
+        rows = run(scale=0.005, n_queries=8, iterations=80,
+                   delta_sizes=(16,), reps=2)
+    else:
+        rows = run(scale=scale)
+    print("# graph_updates: name,us_per_call,derived")
+    for r in rows:
+        if r["case"].startswith("apply_"):
+            print(f"{r['case']},{r['apply_ms_mean']*1e3:.0f},"
+                  f"edges={r['delta_edges']};min_ms={r['apply_ms_min']:.2f};"
+                  f"V={r['V']}")
+        elif r["case"] == "warm_vs_cold":
+            print(f"warm_vs_cold,0,"
+                  f"cold_iters={r['cold_iters_per_wave']:.2f};"
+                  f"warm_iters={r['warm_iters_per_wave']:.2f};"
+                  f"saved={r['warm_start_iterations_saved']}")
+        else:
+            print(f"scoped_invalidation,0,"
+                  f"dropped={r['scoped_dropped']};retained={r['scoped_retained']};"
+                  f"whole_graph={r['whole_graph_would_drop']};"
+                  f"frontier={r['frontier_size']}")
+    return rows
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--scale", type=float, default=0.02)
+    ap.add_argument("--dry-run", action="store_true",
+                    help="tiny graph, one delta size — the CI smoke path")
+    args = ap.parse_args()
+    main(scale=args.scale, dry_run=args.dry_run)

@@ -9,19 +9,26 @@ runs in ~2 minutes.
 ``--json DIR`` additionally writes one machine-readable ``BENCH_<section>.json``
 per section ({"bench", "scale", "rows": [...]}) so the perf trajectory can be
 tracked across commits without re-parsing the human CSV.
+
+``--check`` (with ``--json``) verifies the baselines after the sweep: every
+section that ran must have written a parseable, non-empty file, and a section
+that was *skipped* must not leave a baseline behind — a silently-skipped
+section would otherwise keep a stale committed baseline looking current.
+Exits non-zero on any violation (the CI gate in scripts/ci.sh).
 """
 from __future__ import annotations
 
 import argparse
 import json
 import os
+import sys
 from typing import Any
 
 import numpy as np
 
 from benchmarks import (bench_accuracy, bench_autotune, bench_convergence,
-                        bench_ppr, bench_serving_ppr, bench_sharded_serving,
-                        bench_spmv)
+                        bench_graph_updates, bench_ppr, bench_serving_ppr,
+                        bench_sharded_serving, bench_spmv)
 from benchmarks import roofline_report
 
 
@@ -54,7 +61,13 @@ def main() -> None:
                          "baselines the perf trajectory is tracked against")
     ap.add_argument("--json", metavar="DIR", nargs="?", const=".", default=None,
                     help="also write BENCH_<section>.json rows into DIR")
+    ap.add_argument("--check", action="store_true",
+                    help="after the sweep, fail unless every ran section wrote "
+                         "a parseable non-empty BENCH_<section>.json and no "
+                         "skipped section left a stale baseline (needs --json)")
     args = ap.parse_args()
+    if args.check and not args.json:
+        ap.error("--check requires --json (it verifies the written baselines)")
     scale = 1.0 if args.full else args.scale
     if args.dry_run:
         # sections without a native dry-run mode shrink through scale alone
@@ -78,9 +91,12 @@ def main() -> None:
          lambda: bench_autotune.main(scale=scale, dry_run=dry)),
         ("sharded_serving", "bench_sharded_serving (mesh serving: queries/s vs shard count)",
          lambda: bench_sharded_serving.main(scale=scale, dry_run=dry)),
+        ("graph_updates", "bench_graph_updates (delta apply latency, warm vs cold iterations, scoped invalidation)",
+         lambda: bench_graph_updates.main(scale=scale, dry_run=dry)),
         ("roofline", "roofline (dry-run artifacts; EXPERIMENTS.md section Roofline)",
          lambda: roofline_report.main()),
     ]
+    ran, no_baseline = [], []
     for i, (section, title, fn) in enumerate(sections):
         print(("\n" if i else "") + f"## {title}")
         try:
@@ -89,9 +105,52 @@ def main() -> None:
             # roofline reads pre-generated experiments/roofline artifacts;
             # their absence must not sink the rest of a --json run
             print(f"[skip] {section}: {e}")
+            no_baseline.append(section)
             continue
+        if rows is None:
+            # report-only section (prints, returns no row schema): it has no
+            # baseline to write or verify
+            no_baseline.append(section)
+            continue
+        ran.append(section)
         if args.json:
             _dump(args.json, section, scale, rows)
+    if args.check:
+        _check_baselines(args.json, ran, no_baseline)
+
+
+def _check_baselines(json_dir: str, ran, no_baseline) -> None:
+    """CI gate: the sweep's baselines must be fresh, parseable, non-empty —
+    and a section that produced no rows this sweep (skipped, or report-only)
+    must not leave a stale baseline committed."""
+    problems = []
+    for section in ran:
+        path = os.path.join(json_dir, f"BENCH_{section}.json")
+        if not os.path.exists(path):
+            problems.append(f"{section}: ran but wrote no baseline ({path})")
+            continue
+        try:
+            with open(path) as f:
+                doc = json.load(f)
+        except (OSError, json.JSONDecodeError) as e:
+            problems.append(f"{section}: baseline unreadable ({e})")
+            continue
+        if not doc.get("rows"):
+            problems.append(f"{section}: baseline has no rows ({path})")
+    for section in no_baseline:
+        path = os.path.join(json_dir, f"BENCH_{section}.json")
+        if os.path.exists(path):
+            problems.append(
+                f"{section}: produced no rows this sweep but a baseline "
+                f"exists — stale, delete {path} or unbreak the section")
+    if problems:
+        print("[check] FAILED:")
+        for p in problems:
+            print(f"  - {p}")
+        sys.exit(1)
+    print(f"[check] {len(ran)} baselines OK"
+          + (f" ({len(no_baseline)} sections without baselines)"
+             if no_baseline else ""))
 
 
 if __name__ == "__main__":

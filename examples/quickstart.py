@@ -1,30 +1,55 @@
-"""Quickstart: reduced-precision Personalized PageRank in 30 lines.
+"""Quickstart: serve reduced-precision PPR recommendations and absorb live
+graph updates — the paper's architecture operated as the recommender service
+it was built for.
 
     PYTHONPATH=src python examples/quickstart.py
 
-Builds a small power-law graph, runs batched PPR at the paper's Q1.25
-fixed-point format, and compares the top-10 ranking against the float64
-oracle — the whole paper in miniature.
+register → serve (κ-batched waves, bit-exact Q1.25 fixed point, top-K) →
+apply_delta (epoch-versioned edge ingestion, scoped invalidation, warm-start
+re-convergence) → serve again.
 """
 import numpy as np
 
-from repro.core import PPRConfig, Q1_25, run_ppr
-from repro.core.metrics import full_report, topk_indices
-from repro.graphs import holme_kim_powerlaw, ppr_reference
+from repro.graph_updates import EdgeDelta
+from repro.graphs import holme_kim_powerlaw
+from repro.ppr_serving import PPRQuery, PPRService
 
 # 1. a social-network-like graph (Holme–Kim powerlaw, paper Table 1)
-g = holme_kim_powerlaw(5000, m=8, seed=0)
+g = holme_kim_powerlaw(2000, m=6, seed=0)
 print(f"graph: |V|={g.num_vertices:,} |E|={g.num_edges:,} sparsity={g.sparsity:.1e}")
 
-# 2. personalized PageRank for 4 users at once (κ-batching), 26-bit fixed point
-users = np.array([17, 42, 1337, 4242])
-scores, deltas = run_ppr(g, users, PPRConfig(iterations=10, kappa=4), fmt=Q1_25)
+# 2. a serving instance: κ-batched waves, early-exit at the fixed-point
+#    absorbing state (paper Fig. 7), warm-start seeds across graph updates
+svc = PPRService(kappa=4, iterations=40, early_exit=True, warm_start=True)
+svc.register_graph("social", g, formats=[26])       # pre-quantize Q1.25
 
-# 3. compare against the converged float64 CPU oracle
-ref = ppr_reference(g, users, iterations=100)
-for i, u in enumerate(users):
-    rep = full_report(scores[:, i], ref[:, i])
-    top = topk_indices(scores[:, i], 5)
-    print(f"user {u:5d}: top-5 recs {top.tolist()}  "
-          f"NDCG={rep['ndcg']:.4f} edit@10={rep['edit@10']}")
-print(f"fixed-point converged to absorbing state: delta trace {deltas[-3:]}")
+users = [17, 42, 1337, 1999]
+for rec in svc.serve([PPRQuery("social", u, k=5, precision=26) for u in users]):
+    print(f"user {rec.query.vertex:5d}: top-5 recs {rec.vertices.tolist()} "
+          f"({rec.precision}, {rec.source})")
+
+# 3. a follower burst arrives: one new user joins (vertex growth) and follows
+#    two existing users, one of whom follows back — absorbed in place, no
+#    re-registration: only cache entries near the change are invalidated
+delta = EdgeDelta(add_src=[2000, 2000, 17], add_dst=[17, 42, 2000],
+                  new_num_vertices=2001)
+report = svc.apply_delta("social", delta)
+print(f"delta applied in {report['apply_s']*1e3:.1f} ms: epoch {report['epoch']}, "
+      f"|V| -> {report['num_vertices']}, cache dropped {report['cache_dropped']} "
+      f"/ retained {report['cache_retained']} (frontier {report['frontier_size']})")
+
+# 4. serve the updated graph — invalidated users recompute (warm-started from
+#    their pre-delta converged state, so the wave early-exits sooner),
+#    untouched users hit the cache, and the new user is immediately servable
+for rec in svc.serve([PPRQuery("social", u, k=5, precision=26) for u in users]):
+    print(f"user {rec.query.vertex:5d}: top-5 recs {rec.vertices.tolist()} "
+          f"({rec.precision}, {rec.source})")
+newbie = svc.serve([PPRQuery("social", 2000, k=5, precision=26)])[0]
+print(f"user  2000: top-5 recs {newbie.vertices.tolist()} "
+      f"({newbie.precision}, {newbie.source})")
+
+t = svc.telemetry_summary()
+print(f"telemetry: {t['waves']:.0f} waves, early-exit saved "
+      f"{t['iterations_saved']:.0f} iterations, warm-start saved "
+      f"{t['warm_start_iterations_saved']:.0f} more on "
+      f"{t['warm_start_columns']:.0f} re-converged columns")

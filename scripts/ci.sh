@@ -13,4 +13,7 @@ echo "== tier-1: pytest =="
 python -m pytest -x -q
 
 echo "== smoke + baselines: benchmark sweep (dry run, JSON into repo root) =="
-python -m benchmarks.run --dry-run --json .
+# --check gates the sweep: every ran section must leave a fresh parseable
+# non-empty BENCH_<section>.json, and a skipped section must not leave a
+# stale baseline behind
+python -m benchmarks.run --dry-run --json . --check

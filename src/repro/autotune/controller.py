@@ -172,6 +172,18 @@ class PrecisionController:
             st.good = st.bad = 0
 
     # -- lifecycle -----------------------------------------------------
+    def decay_graph(self, graph: str, keep_fraction: float = 0.5) -> None:
+        """Epoch change (edge delta applied): soften the evidence instead of
+        forgetting it.  Rung positions and promote backoff survive — the
+        quality/bit-width curve moves smoothly with small topology changes
+        (paper Fig. 6's sparsity dependence) — while hysteresis streaks reset
+        (they described the pre-delta topology) and the estimator windows
+        decay toward fresh post-delta shadow samples."""
+        for key, st in self._states.items():
+            if key[0] == graph:
+                st.good = st.bad = 0
+        self.estimator.decay_graph(graph, keep_fraction)
+
     def forget_graph(self, graph: str) -> None:
         """Reset ladder state and estimator windows for a re-registered graph."""
         for key in [k for k in self._states if k[0] == graph]:

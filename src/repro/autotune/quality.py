@@ -136,5 +136,23 @@ class QualityEstimator:
         for key in [k for k in self._windows if k[0] == graph]:
             del self._windows[key]
 
+    def decay_graph(self, graph: str, keep_fraction: float = 0.5) -> None:
+        """Shrink a graph's windows to their newest ``keep_fraction`` samples.
+
+        An edge delta makes old shadow scores *weaker* evidence, not no
+        evidence — the topology moved a little, not wholesale.  Decayed
+        windows may drop below ``min_samples``, in which case ``estimate``
+        abstains until fresh shadow traffic refills them; full
+        re-registration still hard-resets via ``forget_graph``."""
+        if not 0.0 <= keep_fraction <= 1.0:
+            raise ValueError(f"keep_fraction must be in [0, 1], got {keep_fraction}")
+        for (g, _), w in self._windows.items():
+            if g != graph or not w:
+                continue
+            keep = int(np.ceil(len(w) * keep_fraction))
+            kept = list(w)[len(w) - keep:]
+            w.clear()
+            w.extend(kept)
+
 
 __all__ = ["ShadowConfig", "QualityEstimator", "score_quality", "ranking"]

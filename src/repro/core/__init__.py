@@ -1,5 +1,11 @@
 # The paper's primary contribution: reduced-precision streaming COO SpMV + PPR.
-from repro.core.coo import BlockedCOO, COOGraph
+from repro.core.coo import (
+    BlockedCOO,
+    COOGraph,
+    EdgeMergeInfo,
+    merge_edge_delta,
+    quantize_values,
+)
 from repro.core.fixed_point import (
     BITWIDTH_TO_FORMAT,
     PAPER_FORMATS,
@@ -34,7 +40,8 @@ from repro.core.spmv import (
 )
 
 __all__ = [
-    "COOGraph", "BlockedCOO", "QFormat", "format_for_bits",
+    "COOGraph", "BlockedCOO", "EdgeMergeInfo", "merge_edge_delta",
+    "quantize_values", "QFormat", "format_for_bits",
     "Q1_19", "Q1_21", "Q1_23", "Q1_25", "PAPER_FORMATS", "BITWIDTH_TO_FORMAT",
     "PPRConfig", "run_ppr", "batched_ppr", "ppr_float", "make_ppr_fixed",
     "ppr_step_float", "make_ppr_fixed_step",

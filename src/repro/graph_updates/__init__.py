@@ -1,0 +1,44 @@
+"""Dynamic graph updates — epoch-versioned edge-delta ingestion for a live
+``PPRService``.
+
+The paper motivates PPR as the building block of e-commerce and social-network
+recommenders — workloads whose graphs change continuously.  Before this
+subsystem the service could only absorb topology changes via full
+``register_graph`` re-registration: whole-graph cache invalidation, every
+pending query purged, the precision ladder reset.  Delta ingestion makes
+updates a first-class serving operation.
+
+DESIGN — component map
+----------------------
+``delta.py``      ``EdgeDelta``: batched add/remove edge lists + vertex
+                  growth, with ``affected_frontier`` (touched vertices plus
+                  their in-neighbors — the scoped-invalidation surface) and
+                  ``random_delta`` for benchmarks/replay.  The host-side merge
+                  itself lives in ``repro.core.coo.merge_edge_delta``: the
+                  merged arrays are bit-identical to a from-scratch
+                  ``from_edges`` build, but only touched sources are
+                  renormalized and the returned ``EdgeMergeInfo`` lets
+                  registered graphs requantize only changed ``val`` entries
+                  per pre-registered Q format and repartition only affected
+                  destination buckets on meshes.
+``warmstart.py``  ``WarmStartStore``: bounded per-graph LRU of last-converged
+                  PPR columns.  Waves seed ``V0`` from the stored column per
+                  personalization vertex, so the convergence monitor
+                  early-exits in far fewer iterations after a delta.
+
+Service integration (``repro.ppr_serving.service``): ``PPRService.apply_delta``
+bumps the graph's epoch (epoch-tagging cache keys and wave keys), drops only
+cache entries / pending queries whose personalization vertex falls in the
+delta's affected frontier — everything else is retagged to the new epoch and
+kept — decays (rather than resets) the autotune quality windows, and reports
+``deltas_applied`` / ``edges_added`` / ``edges_removed`` /
+``scoped_invalidations`` / ``warm_start_iterations_saved`` telemetry.
+"""
+from repro.core.coo import EdgeMergeInfo, merge_edge_delta, quantize_values
+from repro.graph_updates.delta import EdgeDelta, localized_delta, random_delta
+from repro.graph_updates.warmstart import WarmStartStore
+
+__all__ = [
+    "EdgeDelta", "random_delta", "localized_delta", "WarmStartStore",
+    "EdgeMergeInfo", "merge_edge_delta", "quantize_values",
+]

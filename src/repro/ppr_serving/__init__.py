@@ -47,11 +47,26 @@ the sharded step bodies of ``repro.core.ppr`` — wave keys are
 ``(graph, precision, mesh_key)``, so meshed and single-device traffic never
 mix in one wave, and telemetry counts waves/queries per mesh layout.  The
 fixed-point sharded path is bit-identical to single-device serving (raw-domain
-accumulation is exact); the float path is numerically equal.  Remaining
-follow-on (ROADMAP open item): async prefetch of hot personalization vertices
-into the cache.
+accumulation is exact); the float path is numerically equal.
+
+Dynamic graph updates (repro.graph_updates): ``PPRService.apply_delta`` merges
+batched edge insertions/deletions and vertex growth into a live registered
+graph — epoch-versioned, with *scoped* invalidation (only cache entries and
+pending queries whose personalization vertex falls in the delta's affected
+frontier are dropped; the rest are retagged to the new epoch and keep
+serving), incremental requantization of only the changed edge values per
+pre-registered Q format, per-bucket repartition on meshes, and warm-start
+iteration seeding from each vertex's last converged column
+(``warm_start=True``) so the convergence monitor exits waves early after an
+update.
+
+``prefetch.py`` closes the ROADMAP's async-prefetch follow-on: during idle
+pumps the service issues synthetic queries for predicted-hot uncached
+personalization vertices at the precision controller's currently resolved
+format, and re-warms hot entries a delta's scoped invalidation dropped.
 """
 from repro.ppr_serving.cache import LRUCache
+from repro.ppr_serving.prefetch import PrefetchConfig, Prefetcher
 from repro.ppr_serving.scheduler import Wave, WaveScheduler
 from repro.ppr_serving.service import (
     AUTO_KEY,
@@ -75,5 +90,6 @@ __all__ = [
     "SINGLE_DEVICE_KEY",
     "WaveScheduler", "Wave",
     "LRUCache", "ServiceTelemetry",
+    "PrefetchConfig", "Prefetcher",
     "topk_dense", "topk_streaming",
 ]

@@ -1,9 +1,12 @@
 """LRU result cache: repeat queries skip the PPR iteration entirely.
 
-Keys are ``(graph, vertex, precision, k)`` — the full identity of a served
-recommendation under a fixed service configuration (α and iteration count are
-service-level constants; a service with different numerics should use a fresh
-cache).  Hit/miss/eviction counters feed the telemetry hit-rate.
+Keys are the service's ``_cache_key`` tuples — ``(graph, epoch, vertex,
+precision, k, iterations, early_exit, warm)`` — the full identity of a served
+recommendation, including the graph's delta epoch and the service numerics.
+Scoped delta invalidation (``PPRService.apply_delta``) depends positionally
+on that layout: its ``remap`` callback reads the epoch at index 1 and the
+personalization vertex at index 2.  Hit/miss/eviction counters feed the
+telemetry hit-rate.
 """
 from __future__ import annotations
 
@@ -49,6 +52,35 @@ class LRUCache:
             self._store.popitem(last=False)
             self.evictions += 1
 
+    def remap(self, fn: Callable[[Hashable], Optional[Hashable]]
+              ) -> "tuple[int, int]":
+        """Rewrite every key through ``fn``: return a new key to retag the
+        entry, the same key to keep it, or None to drop it.  Returns
+        ``(dropped, retagged)``; drops count as invalidations.
+
+        This is the scoped-invalidation primitive of delta ingestion: entries
+        whose personalization vertex lies in a delta's affected frontier are
+        dropped, everything else is retagged to the new epoch and keeps
+        serving.  Recency order is preserved; if two keys collide after
+        remapping, the more recently used entry wins (the older one counts as
+        dropped)."""
+        dropped = retagged = 0
+        remapped: "OrderedDict[Hashable, Any]" = OrderedDict()
+        for key, value in self._store.items():
+            new_key = fn(key)
+            if new_key is None:
+                dropped += 1
+                continue
+            if new_key != key:
+                retagged += 1
+            if new_key in remapped:
+                dropped += 1                 # older colliding entry gives way
+                del remapped[new_key]        # re-insert at current recency
+            remapped[new_key] = value
+        self._store = remapped
+        self.invalidations += dropped
+        return dropped, retagged
+
     def invalidate(self, predicate: Callable[[Hashable], bool]) -> int:
         """Drop every entry whose key satisfies ``predicate``; returns the
         count.  Used when a graph is re-registered under an existing name —
@@ -58,6 +90,13 @@ class LRUCache:
             del self._store[k]
         self.invalidations += len(doomed)
         return len(doomed)
+
+    def map_values(self, fn: Callable[[Hashable, Any], Any]) -> None:
+        """Replace every entry's value with ``fn(key, value)`` in place —
+        recency order and counters untouched.  Delta ingestion grows stored
+        warm-start columns through this (repro.graph_updates.warmstart)."""
+        for key in self._store:
+            self._store[key] = fn(key, self._store[key])
 
     @property
     def hit_rate(self) -> float:

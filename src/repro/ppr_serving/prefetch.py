@@ -1,0 +1,109 @@
+"""Async result-cache prefetcher — warm predicted-hot vertices between waves.
+
+The ROADMAP follow-on: the LRU result cache and wave telemetry were built so
+that a prefetcher could be *measured*, not just bolted on.  ``Prefetcher``
+ranks personalization vertices by recent real-query frequency (telemetry's
+``query_vertex_counts``) and, during idle pumps (no wave was launchable), the
+service issues synthetic ``PPRQuery``s for the hottest uncached vertices and
+launches them immediately.  Their results land in the LRU exactly like real
+wave results, so the warmed-hit-rate shows up in the existing ``lru_*``
+counters: synthetic traffic never touches the submit-path ``cache_*`` /
+``lru_*`` hit/miss stats (membership probes are counter-free), so every hit
+they later absorb is a real query that skipped its wave.
+
+Synthetic queries are issued under the cache key real traffic probes: each
+vertex's last real (k, resolved precision) when telemetry has seen one —
+``precision="auto"`` traffic records its post-resolution format, which is the
+rung the controller would resolve next — falling back to the config's ``k``
+at the controller's currently resolved format for the graph.
+
+Composition with delta ingestion: ``PPRService.apply_delta`` reports the hot
+vertices its scoped invalidation dropped; they enter the re-warm queue and are
+re-issued ahead of merely-popular vertices on the next idle pump.
+"""
+from __future__ import annotations
+
+import dataclasses
+import heapq
+from collections import OrderedDict
+from typing import Dict, Iterable, List, Mapping, Optional
+
+
+@dataclasses.dataclass(frozen=True)
+class PrefetchConfig:
+    """Policy for synthetic cache-warming traffic.
+
+    ``top_n``        hottest vertices considered per graph per idle pump.
+    ``k``            fallback top-k for synthetic queries; the service prefers
+                     the vertex's last real-query k so the warmed cache key is
+                     the one real traffic probes (clamped to the graph's V-1).
+    ``max_per_pump`` global cap on synthetic queries issued per idle pump —
+                     prefetch compute must never crowd out a real wave.
+    ``min_count``    a vertex must have this many recent real queries to be
+                     considered hot (and to earn a re-warm after a delta).
+    """
+    top_n: int = 16
+    k: int = 10
+    max_per_pump: int = 8
+    min_count: int = 2
+
+    def __post_init__(self):
+        if self.top_n < 1 or self.k < 1 or self.max_per_pump < 1:
+            raise ValueError("top_n, k and max_per_pump must be >= 1")
+        if self.min_count < 1:
+            raise ValueError("min_count must be >= 1")
+
+
+class Prefetcher:
+    """Rank hot vertices; remember delta-invalidated ones for re-warming."""
+
+    def __init__(self, config: PrefetchConfig = PrefetchConfig()):
+        self.config = config
+        # graph → ordered set of delta-invalidated hot vertices (FIFO)
+        self._rewarm: Dict[str, "OrderedDict[int, None]"] = {}
+        self.issued = 0
+        self.rewarms_queued = 0
+
+    def note_invalidated(self, graph: str, vertices: Iterable[int]) -> None:
+        """Hot vertices whose cache entries a delta's scoped invalidation
+        dropped: first in line at the next idle pump."""
+        queue = self._rewarm.setdefault(graph, OrderedDict())
+        for v in vertices:
+            if int(v) not in queue:
+                queue[int(v)] = None
+                self.rewarms_queued += 1
+
+    def drop_graph(self, graph: str) -> None:
+        """Full re-registration: queued re-warms describe a dead topology."""
+        self._rewarm.pop(graph, None)
+
+    def candidates(self, graph: str, counts: Mapping[int, int],
+                   limit: Optional[int] = None) -> List[int]:
+        """Up to ``limit`` vertices worth warming, most urgent first: the
+        re-warm queue (consumed FIFO, but only as many as ``limit`` allows —
+        the remainder stays queued for the next idle pump), then the
+        ``top_n`` hottest by real-query count.  The caller filters out
+        vertices that are already cached or out of range."""
+        limit = self.config.max_per_pump if limit is None else limit
+        out: List[int] = []
+        queue = self._rewarm.get(graph)
+        while queue and len(out) < limit:
+            v, _ = queue.popitem(last=False)
+            out.append(v)
+        hot = heapq.nsmallest(
+            self.config.top_n,
+            (v for v, n in counts.items() if n >= self.config.min_count),
+            key=lambda v: (-counts[v], v))
+        for v in hot:
+            if len(out) >= limit:
+                break
+            if v not in out:
+                out.append(v)
+        return out
+
+    def stats(self) -> Dict[str, float]:
+        return {
+            "issued": self.issued,
+            "rewarms_queued": self.rewarms_queued,
+            "rewarms_pending": sum(len(q) for q in self._rewarm.values()),
+        }

@@ -2,9 +2,9 @@
 
 Mirrors ``repro.serving.engine``'s slot batcher, specialized for PPR: one wave
 amortizes a full edge-stream pass over up to κ personalization vertices, so
-admission fills waves per (graph, precision, mesh) key — queries on different
-graphs, Q formats, or mesh layouts cannot share a stream and therefore never
-share a wave.
+admission fills waves per (graph, precision, mesh, epoch) key — queries on
+different graphs, Q formats, mesh layouts, or delta epochs cannot share a
+stream and therefore never share a wave.
 
 Flush policy (deadline-aware): a full wave of κ launches immediately; a
 partially-full wave launches once *any* occupant has waited out its admission
@@ -33,9 +33,10 @@ class _Pending:
 
 @dataclasses.dataclass
 class Wave:
-    """One κ-batched launch: all items share a (graph, precision, mesh) stream."""
-    key: Hashable                  # (graph, precision, mesh_key) in the PPR service
-    items: List[Any]
+    """One κ-batched launch: all items share one (graph, precision, mesh,
+    epoch) stream."""
+    key: Hashable                  # (graph, precision, mesh_key, epoch) in the
+    items: List[Any]               # PPR service (epoch = the graph's delta count)
     full: bool                     # False ⇒ deadline-flushed partial wave
 
     def __len__(self) -> int:
@@ -61,15 +62,55 @@ class WaveScheduler:
     def pending(self) -> int:
         return sum(len(q) for q in self._queues.values())
 
-    def purge(self, key_predicate) -> int:
-        """Drop every pending query whose wave key satisfies the predicate;
+    def purge(self, key_predicate, item_predicate=None) -> int:
+        """Drop pending queries whose wave key satisfies ``key_predicate``;
         returns the number dropped.  Used when a graph is re-registered: its
         queued queries were validated against the old topology (their vertices
-        may not even exist in the new one) and must not launch."""
+        may not even exist in the new one) and must not launch.
+
+        With ``item_predicate``, only matching items inside matching keys are
+        dropped (delta ingestion's scoped purge: pending queries whose vertex
+        falls in the affected frontier go, co-queued queries stay)."""
         dropped = 0
         for key in [k for k in self._queues if key_predicate(k)]:
-            dropped += len(self._queues.pop(key))
+            if item_predicate is None:
+                dropped += len(self._queues.pop(key))
+                continue
+            q = self._queues[key]
+            kept = [p for p in q if not item_predicate(p.item)]
+            dropped += len(q) - len(kept)
+            if kept:
+                self._queues[key] = kept
+            else:
+                del self._queues[key]
         return dropped
+
+    def extract(self, key_predicate) -> List[tuple]:
+        """Pop every pending entry under matching keys, returning
+        ``(key, item, enqueued_at, deadline)`` tuples in queue order.
+
+        Delta ingestion uses this to move a graph's surviving pending queries
+        onto new epoch-tagged wave keys: re-``submit`` with ``now=enqueued_at``
+        preserves each query's admission budget across the move."""
+        out: List[tuple] = []
+        for key in [k for k in self._queues if key_predicate(k)]:
+            for p in self._queues.pop(key):
+                out.append((key, p.item, p.enqueued_at, p.deadline))
+        return out
+
+    def flush_keys(self, keys) -> List[Wave]:
+        """Pop the named keys' queues as waves regardless of occupancy or
+        deadline (κ-chunked like ``drain``).  The prefetcher uses this to
+        launch its synthetic queries immediately during an idle pump instead
+        of leaving them to age in the admission queue."""
+        waves: List[Wave] = []
+        for key in [k for k in self._queues if k in keys]:
+            q = self._queues.pop(key)
+            for i in range(0, len(q), self.kappa):
+                chunk = q[i: i + self.kappa]
+                waves.append(Wave(key, [p.item for p in chunk],
+                                  full=len(chunk) == self.kappa))
+        return waves
 
     # ------------------------------------------------------------------
     def ready_waves(self, now: Optional[float] = None) -> List[Wave]:
@@ -94,11 +135,4 @@ class WaveScheduler:
 
     def drain(self) -> List[Wave]:
         """Flush everything unconditionally (end-of-batch / shutdown path)."""
-        waves: List[Wave] = []
-        for key in list(self._queues):
-            q = self._queues.pop(key)
-            for i in range(0, len(q), self.kappa):
-                chunk = q[i: i + self.kappa]
-                waves.append(Wave(key, [p.item for p in chunk],
-                                  full=len(chunk) == self.kappa))
-        return waves
+        return self.flush_keys(set(self._queues))

@@ -36,9 +36,11 @@ import numpy as np
 
 from repro.autotune.controller import AutotuneConfig, PrecisionController
 from repro.autotune.convergence import ConvergencePolicy, run_until_converged
-from repro.core.coo import COOGraph
+from repro.core.coo import COOGraph, EdgeMergeInfo, quantize_values
 from repro.core.fixed_point import PAPER_FORMATS, QFormat, format_for_bits
 from repro.core.metrics import ranking
+from repro.graph_updates.delta import EdgeDelta
+from repro.graph_updates.warmstart import WarmStartStore
 from repro.core.ppr import (
     make_ppr_fixed_step,
     make_ppr_sharded_fixed_step,
@@ -48,8 +50,9 @@ from repro.core.ppr import (
     ppr_float,
     ppr_step_float,
 )
-from repro.core.spmv import partition_edges_by_dst
+from repro.core.spmv import partition_edges_by_dst, sharded_vertex_layout
 from repro.ppr_serving.cache import LRUCache
+from repro.ppr_serving.prefetch import PrefetchConfig, Prefetcher
 from repro.ppr_serving.scheduler import Wave, WaveScheduler
 from repro.ppr_serving.telemetry import SINGLE_DEVICE_KEY, ServiceTelemetry
 from repro.ppr_serving.topk import topk_dense, topk_streaming
@@ -109,6 +112,10 @@ class PPRQuery:
     precision: Precision = None
     deadline: Optional[float] = None
     quality_target: Optional[float] = None
+    # synthetic cache-warming query issued by the prefetcher: computed and
+    # cached like real traffic, but never returned from pump()/drain() and
+    # never counted in the submit-path demand/cache telemetry
+    prefetch: bool = False
 
 
 @dataclasses.dataclass
@@ -123,14 +130,21 @@ class Recommendation:
 
 
 class RegisteredGraph:
-    """Device-resident graph state, prepared once at registration.
+    """Device-resident graph state, prepared once at registration and patched
+    in place by edge deltas.
 
     The full-layout edge stream (``x``/``y``/``val``) is uploaded eagerly —
     every single-device wave reads it.  ``ShardedRegisteredGraph`` defers that
     upload: its waves read only the partitioned shards, and the full layout is
     materialized lazily iff something actually needs it (the float32 shadow
     reference for sampled ``precision="auto"`` traffic) — a meshed graph is
-    registered precisely because one device's memory is tight."""
+    registered precisely because one device's memory is tight.
+
+    ``epoch`` counts applied deltas; the service stamps it into cache keys and
+    wave keys so results computed on different topologies never alias.
+    ``apply_delta`` refreshes device state *incrementally*: only changed
+    ``val`` entries are requantized per pre-registered Q format (the host
+    keeps the raw arrays and the out-degree vector for exactly this)."""
 
     mesh_key = SINGLE_DEVICE_KEY   # waves on this graph run single-device
 
@@ -138,11 +152,16 @@ class RegisteredGraph:
 
     def __init__(self, name: str, g: COOGraph, packet: int = 256):
         self.name = name
+        self.source = g                      # unpadded host graph (delta base)
+        self.packet = packet
+        self.epoch = 0
         self.graph = g.pad_to_packets(packet)
         self.num_vertices = g.num_vertices
         self.dangling = jnp.asarray(self.graph.dangling)
+        self._outdeg = np.bincount(g.y, minlength=g.num_vertices).astype(np.int64)
         self._full_device: Optional[Tuple[jnp.ndarray, ...]] = None
         self._quantized: Dict[QFormat, jnp.ndarray] = {}
+        self._quantized_host: Dict[QFormat, np.ndarray] = {}   # unpadded uint32
         if not self._defer_full_upload:
             self._full()
 
@@ -165,10 +184,53 @@ class RegisteredGraph:
     def val(self) -> jnp.ndarray:
         return self._full()[2]
 
+    def _quantize_host(self, fmt: QFormat) -> np.ndarray:
+        """Raw uint32 values of the *unpadded* edge stream (host-side cache —
+        the base incremental requantization patches on delta application)."""
+        if fmt not in self._quantized_host:
+            self._quantized_host[fmt] = self.source.quantized_val(fmt)
+        return self._quantized_host[fmt]
+
     def quantized(self, fmt: QFormat) -> jnp.ndarray:
         if fmt not in self._quantized:
-            self._quantized[fmt] = jnp.asarray(self.graph.quantized_val(fmt))
+            raw = self._quantize_host(fmt)
+            pad = self.graph.num_edges - raw.shape[0]
+            if pad:
+                raw = np.concatenate([raw, np.zeros(pad, np.uint32)])
+            self._quantized[fmt] = jnp.asarray(raw)
         return self._quantized[fmt]
+
+    # ---- delta ingestion --------------------------------------------------
+    def apply_delta(self, delta: EdgeDelta) -> EdgeMergeInfo:
+        """Merge an edge delta and refresh device state; bumps ``epoch``.
+
+        Pre-registered Q formats are requantized incrementally: surviving
+        edges keep their raw bits (copied through the merge's old→new index
+        map), only ``changed_mask`` entries — edges of sources whose
+        out-degree moved — go through the quantizer again.  The result is
+        bit-identical to quantizing the merged graph from scratch."""
+        new_g, info = delta.apply(self.source, outdeg=self._outdeg)
+        self._outdeg = info.new_outdeg
+        self.source = new_g
+        self.graph = new_g.pad_to_packets(self.packet)
+        self.num_vertices = new_g.num_vertices
+        self.dangling = jnp.asarray(self.graph.dangling)
+        for fmt, old_raw in list(self._quantized_host.items()):
+            new_raw = np.zeros(new_g.num_edges, np.uint32)
+            new_raw[info.new_pos_of_kept] = old_raw[info.kept_old_idx]
+            if info.changed_mask.any():
+                new_raw[info.changed_mask] = quantize_values(
+                    new_g.val[info.changed_mask], fmt)
+            self._quantized_host[fmt] = new_raw
+        for fmt in list(self._quantized):
+            del self._quantized[fmt]
+            self.quantized(fmt)                  # re-upload from patched host raw
+        materialized = self._full_device is not None
+        self._full_device = None
+        if materialized or not self._defer_full_upload:
+            self._full()
+        self.epoch += 1
+        return info
 
     # ---- wave step construction (overridden by the sharded variant) -------
     def float_step(self, alpha: float):
@@ -217,22 +279,76 @@ class ShardedRegisteredGraph(RegisteredGraph):
         self.n_shards = int(mesh.shape[self.axis])
         self.mesh_key = f"mesh:{self.axis}x{self.n_shards}"
         self._packet = packet
+        self._sharded_quantized: Dict[QFormat, jnp.ndarray] = {}
+        self._sharded_quant_host: Dict[QFormat, np.ndarray] = {}  # [S, max_e]
+        self._partition_all()
+
+    def _partition_all(self) -> None:
+        """(Re-)bucket the *unpadded* edge stream by destination range; pad
+        edges would only inflate shard 0 with zero slots the per-shard packet
+        padding already provides."""
         sx, sy, sval = partition_edges_by_dst(
-            self.graph.x, self.graph.y, self.graph.val,
-            self.num_vertices, self.n_shards, packet=packet)
+            self.source.x, self.source.y, self.source.val,
+            self.num_vertices, self.n_shards, packet=self._packet)
+        s = self.n_shards
+        self._host_x = sx.reshape(s, -1)
+        self._host_y = sy.reshape(s, -1)
+        self._host_val = sval.reshape(s, -1)
         self.sharded_x = jnp.asarray(sx)
         self.sharded_y = jnp.asarray(sy)
         self.sharded_val = jnp.asarray(sval)
-        self._sharded_quantized: Dict[QFormat, jnp.ndarray] = {}
+        for fmt in set(self._sharded_quantized) | set(self._sharded_quant_host):
+            _, _, sq = partition_edges_by_dst(
+                self.source.x, self.source.y, self._quantize_host(fmt),
+                self.num_vertices, self.n_shards, packet=self._packet)
+            self._sharded_quant_host[fmt] = sq.reshape(s, -1)
+            self._sharded_quantized[fmt] = jnp.asarray(sq)
 
     def sharded_quantized(self, fmt: QFormat) -> jnp.ndarray:
         """Raw uint32 edge shard values in the partitioned layout (cached)."""
         if fmt not in self._sharded_quantized:
             _, _, sval = partition_edges_by_dst(
-                self.graph.x, self.graph.y, self.graph.quantized_val(fmt),
+                self.source.x, self.source.y, self._quantize_host(fmt),
                 self.num_vertices, self.n_shards, packet=self._packet)
+            self._sharded_quant_host[fmt] = sval.reshape(self.n_shards, -1)
             self._sharded_quantized[fmt] = jnp.asarray(sval)
         return self._sharded_quantized[fmt]
+
+    def apply_delta(self, delta: EdgeDelta) -> EdgeMergeInfo:
+        """Delta ingestion on a meshed graph: re-partition only the
+        destination buckets that own a changed or removed edge.
+
+        Falls back to a full re-partition when the delta moves the bucket
+        geometry itself (vertex growth changing ``ceil(V / n_shards)``) or an
+        affected bucket outgrows the current per-shard padding."""
+        old_v_local, _ = sharded_vertex_layout(self.num_vertices, self.n_shards)
+        info = super().apply_delta(delta)     # merge + epoch + quantized host
+        v_local, _ = sharded_vertex_layout(self.num_vertices, self.n_shards)
+        max_e = self._host_x.shape[1]
+        shard_of = self.source.x // v_local
+        counts = np.bincount(shard_of, minlength=self.n_shards)
+        affected: Optional[np.ndarray] = \
+            np.unique(info.changed_dst // v_local).astype(np.int64)
+        if v_local != old_v_local or counts[affected].max(initial=0) > max_e:
+            self._partition_all()
+            return info
+        for s in affected:
+            m = shard_of == s
+            n = int(counts[s])
+            for host in (self._host_x, self._host_y, self._host_val):
+                host[s, :] = 0
+            self._host_x[s, :n] = self.source.x[m] % v_local
+            self._host_y[s, :n] = self.source.y[m]
+            self._host_val[s, :n] = self.source.val[m]
+            for fmt, hq in self._sharded_quant_host.items():
+                hq[s, :] = 0
+                hq[s, :n] = self._quantized_host[fmt][m]
+        self.sharded_x = jnp.asarray(self._host_x.reshape(-1))
+        self.sharded_y = jnp.asarray(self._host_y.reshape(-1))
+        self.sharded_val = jnp.asarray(self._host_val.reshape(-1))
+        for fmt, hq in self._sharded_quant_host.items():
+            self._sharded_quantized[fmt] = jnp.asarray(hq.reshape(-1))
+        return info
 
     def float_step(self, alpha: float):
         body = make_ppr_sharded_float_step(self.mesh, self.axis,
@@ -268,8 +384,15 @@ class PPRService:
         topk_tile: Optional[int] = None,
         autotune: Optional[AutotuneConfig] = None,
         early_exit: Union[None, bool, ConvergencePolicy] = None,
+        warm_start: Union[bool, int] = False,
+        prefetch: Union[None, bool, PrefetchConfig] = None,
         time_fn=time.monotonic,
     ):
+        """``warm_start`` seeds wave iterations from each personalization
+        vertex's last converged column (True, or an int store capacity per
+        graph) — pair it with ``early_exit`` so the shorter convergence
+        distance actually saves iterations.  ``prefetch`` arms the idle-pump
+        cache warmer (True, or a ``PrefetchConfig``)."""
         self.kappa = kappa
         self.iterations = iterations
         self.alpha = alpha
@@ -283,8 +406,23 @@ class PPRService:
             self.convergence: Optional[ConvergencePolicy] = ConvergencePolicy()
         else:
             self.convergence = early_exit or None
+        if warm_start is True:
+            self._warm: Optional[WarmStartStore] = WarmStartStore()
+        elif warm_start:
+            self._warm = WarmStartStore(capacity_per_graph=int(warm_start))
+        else:
+            self._warm = None
+        if prefetch is True:
+            self.prefetcher: Optional[Prefetcher] = Prefetcher()
+        elif prefetch:
+            self.prefetcher = Prefetcher(prefetch)
+        else:
+            self.prefetcher = None
         self._graphs: Dict[str, RegisteredGraph] = {}
         self._wave_counter = 0
+        # last cold (unseeded) iteration count per (graph, precision): the
+        # baseline warm_start_iterations_saved is measured against
+        self._cold_iters: Dict[Tuple[str, str], int] = {}
 
     # ------------------------------------------------------------------
     def register_graph(self, name: str, g: COOGraph,
@@ -310,6 +448,11 @@ class PPRService:
             self.cache.invalidate(lambda key: key[0] == name)
             self.scheduler.purge(lambda key: key[0] == name)
             self.controller.forget_graph(name)
+            if self._warm is not None:
+                self._warm.drop_graph(name)
+            if self.prefetcher is not None:
+                self.prefetcher.drop_graph(name)
+            self.telemetry.forget_graph_demand(name)
         if mesh is None:
             rg: RegisteredGraph = RegisteredGraph(name, g, packet=packet)
         else:
@@ -331,6 +474,88 @@ class PPRService:
     def graphs(self) -> Tuple[str, ...]:
         return tuple(self._graphs)
 
+    def registered_graph(self, name: str) -> RegisteredGraph:
+        """The live registered-graph state (its ``.source`` is the current
+        host ``COOGraph`` — the base external drivers synthesize deltas
+        against)."""
+        if name not in self._graphs:
+            raise KeyError(f"graph {name!r} is not registered "
+                           f"(have {list(self._graphs)})")
+        return self._graphs[name]
+
+    # ------------------------------------------------------------------
+    def apply_delta(self, name: str, delta: EdgeDelta) -> Dict[str, float]:
+        """Absorb an edge delta into a live registered graph — no
+        stop-the-world re-registration.
+
+        The graph's epoch is bumped (cache keys and wave keys are
+        epoch-tagged), and invalidation is *scoped*: only cache entries and
+        pending queries whose personalization vertex falls in the delta's
+        affected frontier (touched vertices plus their in-neighbors — the
+        one-hop, α-weighted blast radius) are dropped.  Everything else is
+        retagged to the new epoch and keeps serving: entries outside the
+        frontier see only multi-hop, α²-damped rank shifts, a bounded
+        staleness the shadow quality estimator keeps scoring.  Surviving
+        pending queries move to the new epoch's wave keys with their
+        admission budgets intact — they launch against the new topology.
+        Autotune quality windows decay (soft evidence) rather than reset.
+
+        Returns a report dict (also folded into telemetry): epoch, edge
+        counts, scoped-invalidation accounting, apply latency."""
+        if name not in self._graphs:
+            raise KeyError(f"graph {name!r} is not registered "
+                           f"(have {list(self._graphs)})")
+        rg = self._graphs[name]
+        t0 = self.time_fn()
+        frontier = delta.affected_frontier(rg.source)
+        fr = frozenset(int(v) for v in frontier)
+        rg.apply_delta(delta)
+        epoch = rg.epoch
+
+        dropped_vertices: List[int] = []
+
+        def retag(key):
+            if key[0] != name:
+                return key
+            if int(key[2]) in fr:
+                dropped_vertices.append(int(key[2]))
+                return None
+            return (key[0], epoch) + tuple(key[2:])
+
+        cache_dropped, cache_retained = self.cache.remap(retag)
+        moved = self.scheduler.extract(lambda k: k[0] == name)
+        pending_dropped = pending_requeued = 0
+        for key, item, enqueued_at, deadline in moved:
+            if int(item.vertex) in fr:
+                pending_dropped += 1
+            else:
+                self.scheduler.submit((key[0], key[1], key[2], epoch), item,
+                                      deadline=deadline, now=enqueued_at)
+                pending_requeued += 1
+        if self._warm is not None:
+            self._warm.grow(name, rg.num_vertices)
+        self.controller.decay_graph(name)
+        if self.prefetcher is not None:
+            counts = self.telemetry.query_vertex_counts.get(name, {})
+            hot = [v for v in dropped_vertices
+                   if counts.get(v, 0) >= self.prefetcher.config.min_count]
+            self.prefetcher.note_invalidated(name, hot)
+        self.telemetry.record_delta(delta.num_added, delta.num_removed,
+                                    cache_dropped, cache_retained,
+                                    pending_dropped)
+        return {
+            "epoch": epoch,
+            "edges_added": delta.num_added,
+            "edges_removed": delta.num_removed,
+            "num_vertices": rg.num_vertices,
+            "frontier_size": len(fr),
+            "cache_dropped": cache_dropped,
+            "cache_retained": cache_retained,
+            "pending_dropped": pending_dropped,
+            "pending_requeued": pending_requeued,
+            "apply_s": self.time_fn() - t0,
+        }
+
     # ------------------------------------------------------------------
     def _resolve_precision(self, q: PPRQuery) -> str:
         """Concrete precision key for a query; "auto" goes through the ladder."""
@@ -342,11 +567,14 @@ class PPRService:
         return precision_key(q.precision)
 
     def _cache_key(self, q: PPRQuery, pkey: str) -> Tuple:
-        # resolved precision + iteration budget + early-exit mode: an
-        # auto-resolved or early-exited result must never alias an entry
-        # computed under different numerics
-        return (q.graph, int(q.vertex), pkey, int(q.k),
-                int(self.iterations), self.convergence is not None)
+        # graph epoch + resolved precision + iteration budget + early-exit +
+        # warm-start mode: a result computed on an older topology or under
+        # different numerics must never alias a current entry.  Scoped delta
+        # invalidation relies on this layout (epoch at [1], vertex at [2]).
+        epoch = getattr(self._graphs.get(q.graph), "epoch", 0)
+        return (q.graph, epoch, int(q.vertex), pkey,
+                int(q.k), int(self.iterations), self.convergence is not None,
+                self._warm is not None)
 
     def submit(self, q: PPRQuery) -> Optional[Recommendation]:
         """Cache probe; on miss, enqueue for the next wave and return None.
@@ -370,27 +598,82 @@ class PPRService:
                 f"vertices of {q.graph!r} (|V|={rg.num_vertices}, the query "
                 f"vertex excludes itself)")
         pkey = self._resolve_precision(q)
+        self.telemetry.record_query_vertex(q.graph, int(q.vertex),
+                                           k=q.k, pkey=pkey)
         hit = self.cache.get(self._cache_key(q, pkey))
         self.telemetry.record_cache(hit is not None)
         if hit is not None:
             verts, scores = hit
             return Recommendation(q, verts.copy(), scores.copy(),
                                   source="cache", precision=pkey)
-        self.scheduler.submit((q.graph, pkey, rg.mesh_key), q,
+        self.scheduler.submit((q.graph, pkey, rg.mesh_key, rg.epoch), q,
                               deadline=q.deadline)
         return None
 
     def pump(self, now: Optional[float] = None) -> List[Recommendation]:
-        """Launch every wave the admission policy considers ready."""
+        """Launch every wave the admission policy considers ready.
+
+        An *idle* pump (nothing launchable) with a prefetcher armed instead
+        issues synthetic queries for predicted-hot uncached vertices and
+        launches them immediately; their results fill the cache but are never
+        returned — only real queries riding along in a prefetch wave are."""
+        return self._pump(now, allow_prefetch=True)
+
+    def _pump(self, now: Optional[float],
+              allow_prefetch: bool) -> List[Recommendation]:
+        # serve() passes allow_prefetch=False: a synchronous batch whose
+        # queries all hit the cache must not pay a prefetch wave's latency —
+        # prefetch compute belongs to explicit (poll-loop) pump() calls
         recs: List[Recommendation] = []
         for wave in self.scheduler.ready_waves(now=now):
             recs.extend(self._run_wave(wave))
-        return recs
+        if not recs and allow_prefetch and self.prefetcher is not None:
+            recs.extend(self._prefetch_pump(now))
+        return [r for r in recs if not r.query.prefetch]
 
     def drain(self) -> List[Recommendation]:
         """Flush all pending queries regardless of occupancy."""
         recs: List[Recommendation] = []
         for wave in self.scheduler.drain():
+            recs.extend(self._run_wave(wave))
+        return [r for r in recs if not r.query.prefetch]
+
+    def _prefetch_pump(self, now: Optional[float]) -> List[Recommendation]:
+        """Issue + immediately launch synthetic queries for hot uncached
+        vertices, under the cache key real traffic probes: each vertex's last
+        real (k, resolved precision) when known — auto traffic records its
+        post-resolution format, so that matches what the controller would
+        resolve next — else the config's k at the controller's current rung."""
+        cfg = self.prefetcher.config
+        keys = set()
+        issued = 0
+        for name, rg in self._graphs.items():
+            if issued >= cfg.max_per_pump:
+                break
+            counts = self.telemetry.query_vertex_counts.get(name, {})
+            last = self.telemetry.query_vertex_last.get(name, {})
+            for v in self.prefetcher.candidates(name, counts,
+                                                cfg.max_per_pump - issued):
+                if not 0 <= v < rg.num_vertices:
+                    continue                  # stale demand from a dead topology
+                k_v, pkey = last.get(v, (cfg.k, None))
+                if pkey is None:
+                    fmt = self.controller.resolve(name)
+                    pkey = FLOAT_KEY if fmt is None else fmt.name
+                q = PPRQuery(name, int(v), k=min(k_v, rg.num_vertices - 1),
+                             precision=pkey, prefetch=True)
+                if self._cache_key(q, pkey) in self.cache:
+                    continue                  # membership probe: counter-free
+                key = (name, pkey, rg.mesh_key, rg.epoch)
+                self.scheduler.submit(key, q, now=now)
+                keys.add(key)
+                issued += 1
+        if not issued:
+            return []
+        self.prefetcher.issued += issued
+        self.telemetry.record_prefetch(issued)
+        recs: List[Recommendation] = []
+        for wave in self.scheduler.flush_keys(keys):
             recs.extend(self._run_wave(wave))
         return recs
 
@@ -417,7 +700,7 @@ class PPRService:
         # Queries queued via submit() before this serve() call ride along in
         # the same waves; their results are cached/telemetered but belong to
         # no slot here, so route only our own.
-        for rec in self.pump() + self.drain():
+        for rec in self._pump(None, allow_prefetch=False) + self.drain():
             idxs = slot.get(id(rec.query))
             if idxs:
                 out[idxs.popleft()] = rec
@@ -431,6 +714,11 @@ class PPRService:
         s = self.telemetry.summary()
         s.update({f"lru_{k}": v for k, v in self.cache.stats().items()})
         s.update({f"autotune_{k}": v for k, v in self.controller.summary().items()})
+        if self._warm is not None:
+            s.update({f"warm_{k}": v for k, v in self._warm.stats().items()})
+        if self.prefetcher is not None:
+            s.update({f"prefetch_{k}": v
+                      for k, v in self.prefetcher.stats().items()})
         return s
 
     # ------------------------------------------------------------------
@@ -446,8 +734,28 @@ class PPRService:
             scale=scale, track_deltas=False)   # trace unused: skip its syncs
         return P, iters_run
 
+    def _warm_seed(self, rg: RegisteredGraph, wave: Wave, pkey: str,
+                   Vmat) -> Tuple[jnp.ndarray, int]:
+        """``(P0, warm columns)``: the wave's start state, with each column
+        whose personalization vertex has a stored converged column seeded from
+        it instead of the one-hot restart."""
+        seeds = []
+        for col, q in enumerate(wave.items):
+            s = self._warm.get(rg.name, int(q.vertex), pkey)
+            if s is not None and s.shape[0] == rg.num_vertices:
+                seeds.append((col, s))
+        if not seeds:
+            return Vmat, 0
+        P0 = np.asarray(Vmat).copy()
+        for col, s in seeds:
+            P0[:, col] = s
+        # pad columns duplicate column 0's personalization vertex; mirror its
+        # seed too, or a cold pad column gates the wave's (global) early exit
+        P0[:, len(wave.items):] = P0[:, :1]
+        return jnp.asarray(P0), len(seeds)
+
     def _run_wave(self, wave: Wave) -> List[Recommendation]:
-        graph_name, pkey, mesh_key = wave.key
+        graph_name, pkey, mesh_key, _epoch = wave.key
         rg = self._graphs[graph_name]
         fmt = None if pkey == FLOAT_KEY else normalize_precision(pkey)
         t0 = self.time_fn()
@@ -463,15 +771,27 @@ class PPRService:
         if fmt is None:
             Vmat = personalization_matrix(rg.num_vertices, pers)
             step = rg.float_step(self.alpha)
-            P, iters_run = self._iterate(
-                lambda P_: step(Vmat, P_), Vmat, fixed=False, scale=None)
         else:
             Vmat = personalization_matrix_fixed(rg.num_vertices, pers, fmt)
             step = rg.fixed_step(fmt, self.alpha)
-            P, iters_run = self._iterate(
-                lambda P_: step(Vmat, P_), Vmat, fixed=True, scale=fmt.scale)
+        P0, warm_cols = (self._warm_seed(rg, wave, pkey, Vmat)
+                         if self._warm is not None else (Vmat, 0))
+        P, iters_run = self._iterate(
+            lambda P_: step(Vmat, P_), P0, fixed=fmt is not None,
+            scale=None if fmt is None else fmt.scale)
         if iters_run < self.iterations:
             self.telemetry.record_early_exit(self.iterations - iters_run)
+        if self._warm is not None:
+            P_host = np.asarray(P)
+            for col, q in enumerate(wave.items):
+                self._warm.put(graph_name, int(q.vertex), pkey,
+                               P_host[:, col].copy())
+            if warm_cols:
+                base = self._cold_iters.get((graph_name, pkey))
+                saved = max(0, base - iters_run) if base is not None else 0
+                self.telemetry.record_warm_start(warm_cols, saved)
+            else:
+                self._cold_iters[(graph_name, pkey)] = iters_run
 
         k_max = max(q.k for q in wave.items)
         if self.topk_tile is not None:

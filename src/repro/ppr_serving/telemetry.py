@@ -15,7 +15,7 @@ quality/bit-width dial.
 """
 from __future__ import annotations
 
-from typing import Dict, List
+from typing import Dict, List, Optional, Tuple
 
 import numpy as np
 
@@ -48,6 +48,23 @@ class ServiceTelemetry:
         self.shadow_scores: List[float] = []
         self.early_exit_waves = 0
         self.iterations_saved = 0
+        # dynamic graph updates (repro.graph_updates)
+        self.deltas_applied = 0
+        self.edges_added = 0
+        self.edges_removed = 0
+        self.scoped_invalidations = 0      # cache entries + pending queries dropped
+        self.scoped_cache_retained = 0     # entries a whole-graph flush would have lost
+        self.warm_start_waves = 0
+        self.warm_start_columns = 0
+        self.warm_start_iterations_saved = 0
+        # async prefetcher
+        self.prefetch_issued = 0
+        # per-(graph, vertex) demand — what the prefetcher ranks hotness by —
+        # plus each vertex's most recent (k, resolved precision), so a
+        # prefetched entry lands under the cache key real traffic actually
+        # probes (auto traffic records its post-resolution format)
+        self.query_vertex_counts: Dict[str, Dict[int, int]] = {}
+        self.query_vertex_last: Dict[str, Dict[int, Tuple[int, str]]] = {}
 
     # ------------------------------------------------------------------
     def record_wave(self, n_queries: int, kappa: int, latency_s: float,
@@ -82,6 +99,59 @@ class ServiceTelemetry:
         self.early_exit_waves += 1
         self.iterations_saved += int(iterations_saved)
 
+    #: per-graph demand entries above which counts are halved and pruned —
+    #: bounds memory and ages out stale hotness (recency, not lifetime totals)
+    DEMAND_COMPACT_THRESHOLD = 4096
+
+    def record_query_vertex(self, graph: str, vertex: int,
+                            k: Optional[int] = None,
+                            pkey: Optional[str] = None) -> None:
+        """One real (non-synthetic) query's demand for a personalization
+        vertex — the frequency signal the prefetcher ranks."""
+        counts = self.query_vertex_counts.setdefault(graph, {})
+        counts[int(vertex)] = counts.get(int(vertex), 0) + 1
+        if k is not None and pkey is not None:
+            self.query_vertex_last.setdefault(graph, {})[int(vertex)] = \
+                (int(k), pkey)
+        if len(counts) > self.DEMAND_COMPACT_THRESHOLD:
+            compacted = {v: n // 2 for v, n in counts.items() if n // 2}
+            self.query_vertex_counts[graph] = compacted
+            last = self.query_vertex_last.get(graph)
+            if last is not None:
+                self.query_vertex_last[graph] = \
+                    {v: lk for v, lk in last.items() if v in compacted}
+
+    def forget_graph_demand(self, graph: str) -> None:
+        """Drop a graph's per-vertex demand signal (full re-registration:
+        hotness measured on the dead topology must not steer the prefetcher)."""
+        self.query_vertex_counts.pop(graph, None)
+        self.query_vertex_last.pop(graph, None)
+
+    def record_delta(self, edges_added: int, edges_removed: int,
+                     cache_dropped: int, cache_retained: int,
+                     pending_dropped: int) -> None:
+        """One ``apply_delta``: scoped invalidation dropped ``cache_dropped``
+        cache entries and ``pending_dropped`` pending queries, while
+        ``cache_retained`` entries survived that a whole-graph flush (the old
+        re-registration path) would have destroyed."""
+        self.deltas_applied += 1
+        self.edges_added += int(edges_added)
+        self.edges_removed += int(edges_removed)
+        self.scoped_invalidations += int(cache_dropped) + int(pending_dropped)
+        self.scoped_cache_retained += int(cache_retained)
+
+    def record_warm_start(self, columns: int, iterations_saved: int) -> None:
+        """One wave seeded ``columns`` personalization columns from stored
+        converged state; ``iterations_saved`` is measured against the last
+        cold wave of the same (graph, precision) stream."""
+        self.warm_start_waves += 1
+        self.warm_start_columns += int(columns)
+        self.warm_start_iterations_saved += int(iterations_saved)
+
+    def record_prefetch(self, issued: int) -> None:
+        """Synthetic cache-warming queries issued during an idle pump."""
+        self.prefetch_issued += int(issued)
+
     # ------------------------------------------------------------------
     @property
     def waves(self) -> int:
@@ -111,6 +181,15 @@ class ServiceTelemetry:
             if self.shadow_scores else 0.0,
             "early_exit_waves": self.early_exit_waves,
             "iterations_saved": self.iterations_saved,
+            "deltas_applied": self.deltas_applied,
+            "edges_added": self.edges_added,
+            "edges_removed": self.edges_removed,
+            "scoped_invalidations": self.scoped_invalidations,
+            "scoped_cache_retained": self.scoped_cache_retained,
+            "warm_start_waves": self.warm_start_waves,
+            "warm_start_columns": self.warm_start_columns,
+            "warm_start_iterations_saved": self.warm_start_iterations_saved,
+            "prefetch_issued": self.prefetch_issued,
         }
         for pkey, n in sorted(self.served_by_precision.items()):
             out[f"served_{pkey}"] = n

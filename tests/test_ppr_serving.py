@@ -103,6 +103,56 @@ def test_scheduler_keys_do_not_mix():
     assert waves[0].items == [1, 4]
 
 
+def test_scheduler_purge_graph_pending_across_multiple_precision_keys():
+    """One graph's queries pending under several precision (and mesh) keys:
+    a name-prefix purge must drop every one of them and nothing else."""
+    sch = WaveScheduler(kappa=4, max_wait=10.0, time_fn=FakeClock())
+    sch.submit(("g", "f32", "single", 0), "a")
+    sch.submit(("g", "Q1.25", "single", 0), "b")
+    sch.submit(("g", "Q1.19", "mesh:shardx4", 0), "c")
+    sch.submit(("h", "f32", "single", 0), "d")
+    assert sch.purge(lambda k: k[0] == "g") == 3
+    assert sch.pending() == 1
+    waves = sch.drain()
+    assert len(waves) == 1 and waves[0].items == ["d"]
+
+
+def test_scheduler_purge_with_item_predicate_keeps_cobatched():
+    sch = WaveScheduler(kappa=4, max_wait=10.0, time_fn=FakeClock())
+    for v in (1, 2, 3):
+        sch.submit(("g", "f32"), v)
+    sch.submit(("h", "f32"), 9)
+    assert sch.purge(lambda k: k[0] == "g", lambda item: item == 2) == 1
+    assert sch.pending() == 3                   # 1,3 under g + 9 under h
+    waves = sch.drain()
+    assert sorted(sum((w.items for w in waves), [])) == [1, 3, 9]
+
+
+def test_scheduler_extract_preserves_budgets():
+    clk = FakeClock()
+    sch = WaveScheduler(kappa=4, max_wait=1.0, time_fn=clk)
+    sch.submit(("g", 0), "a", deadline=0.5)
+    clk.t = 0.3
+    moved = sch.extract(lambda k: k[0] == "g")
+    assert moved == [(("g", 0), "a", 0.0, 0.5)]
+    assert sch.pending() == 0
+    # re-submission under a new key with now=enqueued_at keeps the clock
+    sch.submit(("g", 1), "a", deadline=0.5, now=0.0)
+    assert sch.ready_waves() == []              # 0.3 < 0.5 budget
+    clk.t = 0.6
+    waves = sch.ready_waves()
+    assert len(waves) == 1 and waves[0].items == ["a"]
+
+
+def test_scheduler_flush_keys_is_targeted():
+    sch = WaveScheduler(kappa=4, max_wait=10.0, time_fn=FakeClock())
+    sch.submit(("g", 0), "a")
+    sch.submit(("h", 0), "b")
+    waves = sch.flush_keys({("g", 0)})
+    assert len(waves) == 1 and waves[0].items == ["a"] and not waves[0].full
+    assert sch.pending() == 1                   # ("h", 0) untouched
+
+
 def test_scheduler_drain_chunks_by_kappa():
     sch = WaveScheduler(kappa=4, max_wait=10.0, time_fn=FakeClock())
     for i in range(6):
@@ -197,6 +247,58 @@ def test_lru_zero_capacity_never_stores():
     c = LRUCache(capacity=0)
     c.put("a", 1)
     assert c.get("a") is None and len(c) == 0
+    # no phantom eviction accounting: nothing was stored, nothing evicted,
+    # but the failed probe still counts as a miss
+    assert c.evictions == 0 and c.hits == 0 and c.misses == 1
+    assert c.stats()["size"] == 0 and c.hit_rate == 0.0
+
+
+def test_lru_invalidate_counter_accounting():
+    c = LRUCache(capacity=8)
+    for i in range(4):
+        c.put(("g", i), i)
+    assert c.invalidate(lambda k: k[1] % 2 == 0) == 2
+    assert c.invalidations == 2 and len(c) == 2
+    # a no-match pass adds nothing
+    assert c.invalidate(lambda k: False) == 0
+    assert c.invalidations == 2
+    # invalidations never masquerade as evictions or misses
+    assert c.evictions == 0 and c.misses == 0
+
+
+def test_lru_repeated_put_same_key_never_evicts():
+    c = LRUCache(capacity=2)
+    for i in range(5):
+        c.put("a", i)                           # refresh, not growth
+    assert c.evictions == 0 and len(c) == 1
+    assert c.get("a") == 4                      # latest value won
+    c.put("b", 1)
+    c.put("c", 2)                               # only now capacity overflows
+    assert c.evictions == 1
+
+
+def test_lru_remap_drop_retag_and_recency():
+    c = LRUCache(capacity=8)
+    c.put(("g", 0, 1), "v1")
+    c.put(("g", 0, 2), "v2")
+    c.put(("h", 0, 1), "w1")
+    assert c.get(("g", 0, 1)) == "v1"           # refresh → ("g",0,2) oldest
+    dropped, retagged = c.remap(
+        lambda k: None if k[0] == "g" and k[2] == 2
+        else ((k[0], 1, k[2]) if k[0] == "g" else k))
+    assert (dropped, retagged) == (1, 1)
+    assert c.invalidations == 1
+    assert c.get(("g", 1, 1)) == "v1" and c.get(("g", 0, 1)) is None
+    assert c.get(("h", 0, 1)) == "w1"           # untouched key kept as-is
+
+
+def test_lru_remap_collision_keeps_most_recent():
+    c = LRUCache(capacity=8)
+    c.put(("a",), "old")
+    c.put(("b",), "new")
+    dropped, _ = c.remap(lambda k: ("same",))
+    assert dropped == 1
+    assert c.get(("same",)) == "new"
 
 
 # ---------------------------------------------------------------------------
