@@ -67,8 +67,8 @@ def run(scale: float = 0.02, n_queries: int = 48, kappa: int = 8,
         svc = PPRService(kappa=kappa, iterations=BASELINE_ITERATIONS,
                          cache_capacity=0)
         svc.register_graph("g", g, formats=[p for p in (prec,) if p])
-        svc.serve([PPRQuery("g", int(v), k=10, precision=prec)
-                   for v in users])
+        svc.run_batch([PPRQuery("g", int(v), k=10, precision=prec)
+                       for v in users])
         s = svc.telemetry_summary()
         rows.append({
             "mode": "static", "precision": _precision_label(prec),
@@ -90,8 +90,8 @@ def run(scale: float = 0.02, n_queries: int = 48, kappa: int = 8,
         svc = PPRService(kappa=kappa, iterations=budget, early_exit=True,
                          autotune=cfg, cache_capacity=0)
         svc.register_graph("g", g)
-        svc.serve([PPRQuery("g", int(v), k=10, precision="auto",
-                            quality_target=target) for v in users])
+        svc.run_batch([PPRQuery("g", int(v), k=10, precision="auto",
+                                quality_target=target) for v in users])
         s = svc.telemetry_summary()
         waves = max(1, int(s["waves"]))
         served = {k[len("served_"):]: v for k, v in s.items()

@@ -80,14 +80,16 @@ def _bench_warm_vs_cold(g, n_queries: int, iterations: int, seed: int) -> List[D
                          warm_start=warm, cache_capacity=0)
         svc.register_graph("g", g, formats=[26])
         services[label] = svc
-        svc.serve([PPRQuery("g", int(v), k=10, precision=26) for v in verts])
+        svc.run_batch([PPRQuery("g", int(v), k=10, precision=26)
+                       for v in verts])
     delta = random_delta(g, np.random.default_rng(seed + 1),
                          n_add=8, n_remove=4)
     iters = {}
     for label, svc in services.items():
         svc.apply_delta("g", delta)
         before = svc.telemetry_summary()
-        svc.serve([PPRQuery("g", int(v), k=10, precision=26) for v in verts])
+        svc.run_batch([PPRQuery("g", int(v), k=10, precision=26)
+                       for v in verts])
         iters[label] = _iters_run(svc, before, svc.telemetry_summary())
     warm_t = services["warm"].telemetry_summary()
     return [{
@@ -108,7 +110,7 @@ def _bench_scoped_invalidation(g, n_queries: int, seed: int) -> List[Dict]:
                        replace=False)
     svc = PPRService(kappa=8, iterations=5)
     svc.register_graph("g", g, formats=[26])
-    svc.serve([PPRQuery("g", int(v), k=10, precision=26) for v in verts])
+    svc.run_batch([PPRQuery("g", int(v), k=10, precision=26) for v in verts])
     cached = svc.telemetry_summary()["lru_size"]
     # low-connectivity endpoints keep the 1-hop frontier small (touching a
     # hub would put its whole in-neighborhood in the frontier)

@@ -41,20 +41,24 @@ def run(scale: float = 0.02, n_queries: int = 64, iterations: int = 10,
                              cache_capacity=0)      # measure compute, not cache
             svc.register_graph("g", g, formats=[p for p in (prec,) if p])
             queries = [PPRQuery("g", int(v), k=10, precision=prec) for v in users]
-            svc.serve(queries[: min(kappa, n_queries)])   # warm up jit
+            svc.run_batch(queries[: min(kappa, n_queries)])   # warm up jit
             svc = PPRService(kappa=kappa, iterations=iterations, cache_capacity=0)
             svc.register_graph("g", g, formats=[p for p in (prec,) if p])
-            svc.serve(queries)
+            svc.run_batch(queries)
             s = svc.telemetry_summary()
+            engine_key = "float" if prec is None else "fixed"
             rows.append({
                 "kappa": kappa,
                 "precision": _precision_label(prec),
+                "engine": engine_key,
                 "V": g.num_vertices,
                 "E": g.num_edges,
                 "queries": n_queries,
                 "queries_per_s": s["queries_per_s"],
                 "p50_s": s["wave_latency_p50_s"],
                 "p95_s": s["wave_latency_p95_s"],
+                "engine_mean_s": s.get(f"engine_{engine_key}_latency_mean_s", 0.0),
+                "engine_p95_s": s.get(f"engine_{engine_key}_latency_p95_s", 0.0),
                 "occupancy": s["mean_occupancy"],
             })
     return rows
@@ -71,7 +75,9 @@ def main(scale: float = 0.02, dry_run: bool = False):
         print(f"serving_k{r['kappa']}_{r['precision']},{us_per_query:.0f},"
               f"qps={r['queries_per_s']:.1f}"
               f";p50_us={r['p50_s']*1e6:.0f};p95_us={r['p95_s']*1e6:.0f}"
-              f";occupancy={r['occupancy']:.2f}")
+              f";occupancy={r['occupancy']:.2f}"
+              f";engine={r['engine']}"
+              f";engine_p95_us={r['engine_p95_s']*1e6:.0f}")
     return rows
 
 

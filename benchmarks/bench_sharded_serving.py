@@ -58,13 +58,16 @@ def _inner(scale: float, n_queries: int, kappa: int, iterations: int,
                                mesh=mesh)
             queries = [PPRQuery("g", int(v), k=10, precision=prec)
                        for v in users]
-            svc.serve(queries[: min(kappa, n_queries)])      # warm up jit
+            svc.run_batch(queries[: min(kappa, n_queries)])  # warm up jit
             svc.telemetry.reset()      # count only the timed traffic
-            svc.serve(queries)
+            svc.run_batch(queries)
             s = svc.telemetry_summary()
+            engine_key = ("float" if prec is None else "fixed") if mesh is None \
+                else ("sharded_float" if prec is None else "sharded_fixed")
             rows.append({
                 "shards": n_shards,
                 "precision": "f32" if prec is None else f"q{prec}",
+                "engine": engine_key,
                 "V": g.num_vertices,
                 "E": g.num_edges,
                 "kappa": kappa,
@@ -72,6 +75,8 @@ def _inner(scale: float, n_queries: int, kappa: int, iterations: int,
                 "queries_per_s": s["queries_per_s"],
                 "p50_s": s["wave_latency_p50_s"],
                 "p95_s": s["wave_latency_p95_s"],
+                "engine_mean_s": s.get(f"engine_{engine_key}_latency_mean_s", 0.0),
+                "engine_p95_s": s.get(f"engine_{engine_key}_latency_p95_s", 0.0),
                 "waves": s["waves"],
             })
     return rows
@@ -119,7 +124,9 @@ def main(scale: float = 0.02, dry_run: bool = False) -> List[Dict]:
         print(f"sharded_s{r['shards']}_{r['precision']},{us:.0f},"
               f"qps={r['queries_per_s']:.1f}"
               f";p50_us={r['p50_s']*1e6:.0f};p95_us={r['p95_s']*1e6:.0f}"
-              f";V={r['V']};waves={r['waves']}")
+              f";V={r['V']};waves={r['waves']}"
+              f";engine={r['engine']}"
+              f";engine_p95_us={r['engine_p95_s']*1e6:.0f}")
     return rows
 
 

@@ -1,7 +1,7 @@
-"""E-commerce co-purchasing recommendations served through `PPRService`:
-κ-batched admission waves, per-query bit-width, streaming top-K, and an LRU
-result cache — the paper's architecture (reduced-precision streaming SpMV for
-PPR) operated as the recommender service it was built for.
+"""E-commerce co-purchasing recommendations served through `PPRService`'s
+futures API: κ-batched admission waves, per-query bit-width, streaming top-K,
+and an LRU result cache — the paper's architecture (reduced-precision
+streaming SpMV for PPR) operated as the recommender service it was built for.
 
     PYTHONPATH=src python examples/ppr_recommender.py
 """
@@ -18,6 +18,7 @@ print(f"catalog graph: |V|={g.num_vertices:,} products, |E|={g.num_edges:,} co-p
 service = PPRService(kappa=8, iterations=10, cache_capacity=1024)
 service.register_graph("amazon", g, formats=[20, 26])  # pre-quantize at registration
 
+
 # 100 user queries (paper §5.1 protocol), served per bit-width
 rng = np.random.default_rng(0)
 users = rng.integers(0, g.num_vertices, 100)
@@ -25,17 +26,18 @@ users = rng.integers(0, g.num_vertices, 100)
 for bits in (20, 26):
     # warm up jit on one wave, then measure a fresh service pass (the jitted
     # step/top-k executables are process-global, so only stats start cold)
-    service.serve([PPRQuery("amazon", int(v), k=10, precision=bits)
-                   for v in users[:8]])
+    service.run_batch([PPRQuery("amazon", int(v), k=10, precision=bits)
+                       for v in users[:8]])
     svc = PPRService(kappa=8, iterations=10, cache_capacity=1024)
     svc.register_graph("amazon", g, formats=[bits])
-    recs = svc.serve([PPRQuery("amazon", int(v), k=10, precision=bits)
-                      for v in users])
+    recs = svc.run_batch([PPRQuery("amazon", int(v), k=10, precision=bits)
+                          for v in users])
     s = svc.telemetry_summary()
     print(f"\nQ1.{bits-1}: {s['queries_served']:.0f} queries in "
           f"{sum(svc.telemetry.wave_latencies_s)*1000:.0f} ms "
           f"({s['queries_per_s']:.0f} queries/s, "
-          f"{s['waves']:.0f} waves, occupancy {s['mean_occupancy']:.2f}, "
+          f"{s['waves']:.0f} waves on the {s.get('engine_fixed_waves', 0):.0f}-wave "
+          f"fixed engine, occupancy {s['mean_occupancy']:.2f}, "
           f"wave p95 {s['wave_latency_p95_s']*1000:.0f} ms)")
 
     # quality check on 3 queries vs converged oracle (self excluded, like the service)
@@ -49,13 +51,15 @@ for bits in (20, 26):
         print(f"  user {users[i]:6d}: top-10 overlap with oracle {overlap}/10 "
               f"top-3 recs {top_fast[:3].tolist()}")
 
-# repeat traffic: the LRU cache short-circuits the whole iteration pipeline
+# repeat traffic: the LRU cache short-circuits the whole iteration pipeline —
+# a repeat submit returns an already-resolved future (no wave, no flush)
 repeat = [PPRQuery("amazon", int(v), k=10, precision=26) for v in users[:20]]
-service.serve(repeat)
-again = service.serve(repeat)
+service.run_batch(repeat)
+again = [service.submit(q) for q in repeat]
+assert all(f.done() for f in again)            # resolved before flush
 s = service.telemetry_summary()
-print(f"\nrepeat traffic: {sum(r.source == 'cache' for r in again)}/20 served "
-      f"from cache (service hit rate {s['cache_hit_rate']:.2f})")
+print(f"\nrepeat traffic: {sum(f.result().source == 'cache' for f in again)}/20 "
+      f"served from cache (service hit rate {s['cache_hit_rate']:.2f})")
 
 # adaptive precision: ask for a quality target instead of a bit-width — the
 # autotune subsystem picks the cheapest Q format whose shadow-sampled NDCG
@@ -66,9 +70,9 @@ auto_svc = PPRService(kappa=8, iterations=100, early_exit=True,
                       autotune=AutotuneConfig(
                           shadow=ShadowConfig(sample_fraction=0.5, seed=0)))
 auto_svc.register_graph("amazon", g)
-auto_recs = auto_svc.serve([PPRQuery("amazon", int(v), k=10, precision="auto",
-                                     quality_target=0.95)
-                            for v in users[:32]])
+auto_recs = auto_svc.run_batch(
+    [PPRQuery("amazon", int(v), k=10, precision="auto", quality_target=0.95)
+     for v in users[:32]])
 s = auto_svc.telemetry_summary()
 served = {r.precision for r in auto_recs}
 print(f"\nauto precision (NDCG target 0.95): served at {sorted(served)}, "

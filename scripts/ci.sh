@@ -12,6 +12,13 @@ export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 echo "== tier-1: pytest =="
 python -m pytest -x -q
 
+echo "== examples smoke (ported to the futures API, deprecation-clean) =="
+# the ported examples must not touch the deprecated serve()/pump()/drain()
+# wrappers — the warning is attributed to the calling frame (stacklevel), so
+# scoping the filter to __main__ catches exactly the example's own usage
+# without tripping on unrelated import-time warnings from jax/numpy
+python -W error::DeprecationWarning:__main__ examples/quickstart.py
+
 echo "== smoke + baselines: benchmark sweep (dry run, JSON into repo root) =="
 # --check gates the sweep: every ran section must leave a fresh parseable
 # non-empty BENCH_<section>.json, and a skipped section must not leave a

@@ -134,17 +134,19 @@ def _serve(args, g, vertices, fmt, label):
     precision = None if fmt is None else fmt.name
     queries = [PPRQuery(args.graph, int(v), k=args.topk, precision=precision)
                for v in vertices]
-    svc.serve(queries[: min(args.kappa, len(queries))])       # warm up jit
+
+    svc.run_batch(queries[: min(args.kappa, len(queries))])   # warm up jit
     svc.telemetry.reset()              # report only the timed traffic
     t0 = time.time()
-    recs = svc.serve(queries)
+    recs = svc.run_batch(queries)
     dt = time.time() - t0
     where = "single-device" if mesh is None else f"{args.shards}-shard mesh"
     print(f"{label} via PPRService on {where}: {len(recs)} queries in {dt:.3f}s "
           f"({len(recs)/dt:.1f} req/s, κ={args.kappa}, top-{args.topk})")
     t = svc.telemetry_summary()
     for k in sorted(t):
-        if k.startswith(("waves", "queries_", "wave_latency", "mean_occ")):
+        if k.startswith(("waves", "queries_", "wave_latency", "mean_occ",
+                         "engine_")):
             v = t[k]
             print(f"  {k:28s} {v:.5f}" if isinstance(v, float) else
                   f"  {k:28s} {v}")
@@ -180,7 +182,7 @@ def _replay_deltas(args, g, fmt, label):
         return [PPRQuery(args.graph, int(v), k=args.topk, precision=precision)
                 for v in verts]
 
-    svc.serve(traffic(0))                       # warm up jit + caches
+    svc.run_batch(traffic(0))                   # warm up jit + caches
     print(f"{label}: replaying {args.replay_deltas} delta rounds of "
           f"~{args.delta_edges + args.delta_edges // 2} edges on "
           f"{args.graph} (|V|={g.num_vertices:,})")
@@ -196,9 +198,9 @@ def _replay_deltas(args, g, fmt, label):
             d = random_delta(rg.source, rng, n_add=args.delta_edges,
                              n_remove=args.delta_edges // 2, grow=grow)
         rep = svc.apply_delta(args.graph, d)
-        svc.pump()                              # idle pump → prefetch re-warm
+        svc.poll()                              # idle poll → prefetch re-warm
         t0 = time.time()
-        recs = svc.serve(traffic(i + 1))
+        recs = svc.run_batch(traffic(i + 1))
         dt = time.time() - t0
         cached = sum(r.source == "cache" for r in recs)
         print(f"  round {i + 1}: epoch={rep['epoch']} "

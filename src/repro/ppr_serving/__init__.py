@@ -11,9 +11,26 @@ DESIGN — component ↔ paper section map
 ``service.py``    The facade.  Registers named graphs once (device placement,
                   packet padding, per-format quantization — the paper's §3
                   preprocessing, amortized across a graph's lifetime), accepts
-                  ``PPRQuery(vertex, k, precision, deadline)`` and returns
-                  ranked ``Recommendation``s.  Per-query ``precision`` is the
-                  serving-side realization of §5.3's bit-width/accuracy dial.
+                  ``PPRQuery(vertex, k, precision, deadline)`` and returns a
+                  ``PPRFuture`` per ``submit`` that resolves to a ranked
+                  ``Recommendation`` when its wave completes (``poll``/
+                  ``flush`` drive launches; ``serve``/``pump``/``drain`` are
+                  deprecated blocking wrappers).  Per-query ``precision`` is
+                  the serving-side realization of §5.3's bit-width/accuracy
+                  dial.
+``engine/``       The pluggable datapath layer — the paper's own seam between
+                  the host-side streaming front-end and interchangeable
+                  reduced-precision SpMV datapaths.  ``WaveEngine.plan``
+                  binds each wave to a backend ("float"/"fixed" single-device
+                  or their mesh-sharded counterparts); new layouts plug in as
+                  registered engines instead of service branches.
+``futures.py``    ``PPRFuture``: done()/result()/add_done_callback(), resolved
+                  by wave completion, rejected (``QueryRejected``) instead of
+                  dangling when re-registration or a delta invalidates the
+                  pending query.
+``graphs.py``     Registered-graph state: host topology, packet padding, raw
+                  quantization caches, and the host-side incremental delta
+                  merge the engines refresh device state from.
 ``scheduler.py``  κ-batch admission waves (§5.1's κ-batching as an *admission
                   policy*): one wave amortizes a full edge-stream pass over up
                   to κ personalization columns.  Deadline-aware flush launches
@@ -61,31 +78,51 @@ iteration seeding from each vertex's last converged column
 update.
 
 ``prefetch.py`` closes the ROADMAP's async-prefetch follow-on: during idle
-pumps the service issues synthetic queries for predicted-hot uncached
+polls the service issues synthetic queries for predicted-hot uncached
 personalization vertices at the precision controller's currently resolved
 format, and re-warms hot entries a delta's scoped invalidation dropped.
+Demand counts decay exponentially under a configurable half-life
+(``PrefetchConfig.half_life_s``), so hotness tracks recent traffic instead of
+lifetime totals.
 """
 from repro.ppr_serving.cache import LRUCache
+from repro.ppr_serving.engine import (
+    FixedEngine,
+    FloatEngine,
+    ShardedFixedEngine,
+    ShardedFloatEngine,
+    WaveEngine,
+    WavePlan,
+    engine_families,
+    engine_for,
+    engine_names,
+    family_members,
+    get_engine,
+    register_engine,
+)
+from repro.ppr_serving.futures import PPRFuture, QueryRejected
+from repro.ppr_serving.graphs import RegisteredGraph, ShardedRegisteredGraph
 from repro.ppr_serving.prefetch import PrefetchConfig, Prefetcher
 from repro.ppr_serving.scheduler import Wave, WaveScheduler
 from repro.ppr_serving.service import (
     AUTO_KEY,
     FLOAT_KEY,
-    SINGLE_DEVICE_KEY,
     PPRQuery,
     PPRService,
     Recommendation,
-    RegisteredGraph,
-    ShardedRegisteredGraph,
     normalize_precision,
     precision_key,
 )
-from repro.ppr_serving.telemetry import ServiceTelemetry
+from repro.ppr_serving.telemetry import SINGLE_DEVICE_KEY, ServiceTelemetry
 from repro.ppr_serving.topk import topk_dense, topk_streaming
 
 __all__ = [
-    "PPRService", "PPRQuery", "Recommendation", "RegisteredGraph",
-    "ShardedRegisteredGraph",
+    "PPRService", "PPRQuery", "Recommendation", "PPRFuture", "QueryRejected",
+    "RegisteredGraph", "ShardedRegisteredGraph",
+    "WaveEngine", "WavePlan",
+    "register_engine", "get_engine", "engine_for", "family_members",
+    "engine_names", "engine_families",
+    "FloatEngine", "FixedEngine", "ShardedFloatEngine", "ShardedFixedEngine",
     "normalize_precision", "precision_key", "AUTO_KEY", "FLOAT_KEY",
     "SINGLE_DEVICE_KEY",
     "WaveScheduler", "Wave",

@@ -1,0 +1,46 @@
+"""Engine backends — the pluggable datapath layer behind `PPRService`.
+
+DESIGN — why a backend protocol
+-------------------------------
+The paper's architecture is explicitly layered: a host-side streaming
+front-end packages the edge stream, and interchangeable reduced-precision
+SpMV datapaths iterate it (the CPU–FPGA synergy argument of arXiv
+2004.13907).  This package is that seam in software: the serving front-end
+(admission waves, futures, cache, telemetry) talks to a small ``WaveEngine``
+protocol, and each datapath — float32 reference, bit-exact Qm.f fixed point,
+and their mesh-sharded counterparts — is one backend behind it.
+
+``WaveEngine.plan(graph, fmt) -> WavePlan`` binds a wave to device state: the
+personalization-matrix builder, the one-iteration step over the engine's
+device arrays, the iterate driver (fixed budget or early-exit), and the top-K
+reduction.  ``prepare`` materializes device state at registration;
+``on_delta`` refreshes it after an edge-delta merge (incremental
+requantization upload, per-bucket repartition).
+
+Engines register by name into *families* ("single", "sharded") with one
+float and one fixed member; ``PPRService.register_graph(..., engine=...)``
+selects a family, and every wave resolves to the member for its precision.
+New datapaths — the multi-channel layouts of arXiv 2103.04808, sharded
+top-K, P_t sharding, future Pallas kernels — plug in as new engines instead
+of new branches in the service.
+"""
+from repro.ppr_serving.engine.base import (
+    WaveEngine,
+    WavePlan,
+    engine_families,
+    engine_for,
+    engine_names,
+    family_members,
+    get_engine,
+    register_engine,
+)
+from repro.ppr_serving.engine.single import FixedEngine, FloatEngine
+from repro.ppr_serving.engine.sharded import ShardedFixedEngine, ShardedFloatEngine
+
+__all__ = [
+    "WaveEngine", "WavePlan",
+    "register_engine", "get_engine", "engine_for", "family_members",
+    "engine_names", "engine_families",
+    "FloatEngine", "FixedEngine",
+    "ShardedFloatEngine", "ShardedFixedEngine",
+]

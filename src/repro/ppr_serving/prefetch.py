@@ -25,8 +25,9 @@ from __future__ import annotations
 
 import dataclasses
 import heapq
+import time
 from collections import OrderedDict
-from typing import Dict, Iterable, List, Mapping, Optional
+from typing import Dict, Iterable, List, Mapping, MutableMapping, Optional
 
 
 @dataclasses.dataclass(frozen=True)
@@ -41,28 +42,76 @@ class PrefetchConfig:
                      prefetch compute must never crowd out a real wave.
     ``min_count``    a vertex must have this many recent real queries to be
                      considered hot (and to earn a re-warm after a delta).
+    ``half_life_s``  exponential half-life of the demand counts (seconds):
+                     before each idle pump ranks candidates, every vertex's
+                     count is scaled by ``0.5 ** (elapsed / half_life_s)`` —
+                     a vertex hot an hour ago no longer ranks hot forever.
+                     None (the default) keeps the legacy cumulative counts.
     """
     top_n: int = 16
     k: int = 10
     max_per_pump: int = 8
     min_count: int = 2
+    half_life_s: Optional[float] = None
 
     def __post_init__(self):
         if self.top_n < 1 or self.k < 1 or self.max_per_pump < 1:
             raise ValueError("top_n, k and max_per_pump must be >= 1")
         if self.min_count < 1:
             raise ValueError("min_count must be >= 1")
+        if self.half_life_s is not None and not self.half_life_s > 0:
+            raise ValueError(f"half_life_s must be > 0 (or None), "
+                             f"got {self.half_life_s}")
 
 
 class Prefetcher:
     """Rank hot vertices; remember delta-invalidated ones for re-warming."""
 
-    def __init__(self, config: PrefetchConfig = PrefetchConfig()):
+    def __init__(self, config: PrefetchConfig = PrefetchConfig(),
+                 time_fn=time.monotonic):
         self.config = config
+        self.time_fn = time_fn           # injectable clock (demand decay)
         # graph → ordered set of delta-invalidated hot vertices (FIFO)
         self._rewarm: Dict[str, "OrderedDict[int, None]"] = {}
+        # graph → last demand-decay timestamp; a graph never decayed before
+        # falls back to the construction stamp, so demand accumulated during
+        # a long poll-free stretch still ages on the *first* idle poll
+        self._last_decay: Dict[str, float] = {}
+        self._start = time_fn()
         self.issued = 0
         self.rewarms_queued = 0
+
+    def decay_demand(self, graph: str, counts: MutableMapping[int, float],
+                     now: Optional[float] = None,
+                     last_seen: Optional[MutableMapping[int, tuple]] = None
+                     ) -> None:
+        """Exponentially age ``counts`` in place by the time elapsed since the
+        last decay of this graph (no-op without a configured half-life).
+
+        Counts that cool below a small floor are pruned outright — they can
+        never clear ``min_count`` again without fresh traffic, and pruning
+        keeps the demand map from accumulating dead vertices.  ``last_seen``
+        (telemetry's per-vertex (k, precision) map) is pruned in lockstep:
+        its only other pruning path is the compaction threshold on the counts
+        map, which decay keeps small enough to never fire — without this it
+        would grow one entry per vertex ever queried."""
+        hl = self.config.half_life_s
+        if hl is None:
+            return
+        now = self.time_fn() if now is None else now
+        last = self._last_decay.get(graph, self._start)
+        if now <= last:
+            return               # stamps only advance: an out-of-order `now`
+        self._last_decay[graph] = now   # must not rewind and over-age later
+        factor = 0.5 ** ((now - last) / hl)
+        for v in list(counts):
+            cooled = counts[v] * factor
+            if cooled < 0.05:
+                del counts[v]
+                if last_seen is not None:
+                    last_seen.pop(v, None)
+            else:
+                counts[v] = cooled
 
     def note_invalidated(self, graph: str, vertices: Iterable[int]) -> None:
         """Hot vertices whose cache entries a delta's scoped invalidation
@@ -76,6 +125,7 @@ class Prefetcher:
     def drop_graph(self, graph: str) -> None:
         """Full re-registration: queued re-warms describe a dead topology."""
         self._rewarm.pop(graph, None)
+        self._last_decay.pop(graph, None)
 
     def candidates(self, graph: str, counts: Mapping[int, int],
                    limit: Optional[int] = None) -> List[int]:

@@ -1,22 +1,30 @@
-"""`PPRService` — the multi-tenant query-serving facade over the numeric core.
+"""`PPRService` — the futures-based query front-end over the engine backends.
 
-Lifecycle: graphs are registered once (host arrays moved to device, edge
-stream padded to packets, per-format quantized values cached; with ``mesh=``
-additionally partitioned by destination range over a mesh axis for
-multi-device serving), then queries flow through
+Lifecycle: graphs are registered once onto an engine family (host arrays
+moved to device, edge stream padded to packets, per-format quantized values
+cached; the "sharded" family additionally partitions by destination range
+over a mesh axis), then queries flow through
 
     submit → precision resolution ("auto" → controller) → result cache probe
-           → κ-batch scheduler → wave launch → step-driven PPR iterations
-           (early-exit on convergence) → streaming top-K → cache fill
+           → PPRFuture (resolved immediately on a hit; else queued)
+           → κ-batch scheduler → wave launch → engine plan (step + iterate +
+             early-exit + top-K) → futures resolve → cache fill
            → shadow quality feedback
 
+``submit`` returns a ``PPRFuture`` per query; ``poll``/``flush`` (or a
+pending future's own ``result()``) drive wave launches, and each completed
+wave resolves its occupants' futures.  The legacy blocking entry points —
+``serve``/``pump``/``drain`` — remain as thin compatibility wrappers over the
+futures path and emit ``DeprecationWarning``.
+
 A wave shares one edge stream over up to κ personalization columns (the
-paper's κ-batching); each wave is driven one eq. (1) iteration at a time via
-``ppr_step_float`` / ``make_ppr_fixed_step``, which is what lets the
-convergence monitor (repro.autotune.convergence, paper Fig. 7) stop a wave at
-the fixed-point absorbing state instead of burning the full budget.  Results
-are ranked ``Recommendation``s — the query vertex itself is always excluded
-from its own top-k.
+paper's κ-batching).  *How* a wave iterates is the engine backend's business
+(``repro.ppr_serving.engine``): the graph's engine family resolves each wave
+to a concrete engine ("float"/"fixed"/"sharded_float"/"sharded_fixed"), whose
+``WavePlan`` binds the device arrays, the eq. (1) step, the iterate driver
+(early-exit per the convergence monitor, paper Fig. 7) and the top-K
+reduction.  Results are ranked ``Recommendation``s — the query vertex itself
+is always excluded from its own top-k.
 
 ``precision="auto"`` queries are resolved to a concrete format *before wave
 admission* by the adaptive-precision controller (repro.autotune.controller),
@@ -29,33 +37,25 @@ from __future__ import annotations
 
 import dataclasses
 import time
+import warnings
 from typing import Dict, List, Optional, Sequence, Tuple, Union
 
 import jax.numpy as jnp
 import numpy as np
 
 from repro.autotune.controller import AutotuneConfig, PrecisionController
-from repro.autotune.convergence import ConvergencePolicy, run_until_converged
-from repro.core.coo import COOGraph, EdgeMergeInfo, quantize_values
+from repro.autotune.convergence import ConvergencePolicy
 from repro.core.fixed_point import PAPER_FORMATS, QFormat, format_for_bits
 from repro.core.metrics import ranking
 from repro.graph_updates.delta import EdgeDelta
 from repro.graph_updates.warmstart import WarmStartStore
-from repro.core.ppr import (
-    make_ppr_fixed_step,
-    make_ppr_sharded_fixed_step,
-    make_ppr_sharded_float_step,
-    personalization_matrix,
-    personalization_matrix_fixed,
-    ppr_float,
-    ppr_step_float,
-)
-from repro.core.spmv import partition_edges_by_dst, sharded_vertex_layout
 from repro.ppr_serving.cache import LRUCache
+from repro.ppr_serving.engine import engine_families, engine_for, family_members
+from repro.ppr_serving.futures import PPRFuture, QueryRejected
+from repro.ppr_serving.graphs import RegisteredGraph, ShardedRegisteredGraph
 from repro.ppr_serving.prefetch import PrefetchConfig, Prefetcher
 from repro.ppr_serving.scheduler import Wave, WaveScheduler
 from repro.ppr_serving.telemetry import SINGLE_DEVICE_KEY, ServiceTelemetry
-from repro.ppr_serving.topk import topk_dense, topk_streaming
 
 Precision = Union[None, int, str, QFormat]
 
@@ -129,250 +129,17 @@ class Recommendation:
     precision: str = ""            # resolved precision key ("f32" / "Q1.f")
 
 
-class RegisteredGraph:
-    """Device-resident graph state, prepared once at registration and patched
-    in place by edge deltas.
-
-    The full-layout edge stream (``x``/``y``/``val``) is uploaded eagerly —
-    every single-device wave reads it.  ``ShardedRegisteredGraph`` defers that
-    upload: its waves read only the partitioned shards, and the full layout is
-    materialized lazily iff something actually needs it (the float32 shadow
-    reference for sampled ``precision="auto"`` traffic) — a meshed graph is
-    registered precisely because one device's memory is tight.
-
-    ``epoch`` counts applied deltas; the service stamps it into cache keys and
-    wave keys so results computed on different topologies never alias.
-    ``apply_delta`` refreshes device state *incrementally*: only changed
-    ``val`` entries are requantized per pre-registered Q format (the host
-    keeps the raw arrays and the out-degree vector for exactly this)."""
-
-    mesh_key = SINGLE_DEVICE_KEY   # waves on this graph run single-device
-
-    _defer_full_upload = False
-
-    def __init__(self, name: str, g: COOGraph, packet: int = 256):
-        self.name = name
-        self.source = g                      # unpadded host graph (delta base)
-        self.packet = packet
-        self.epoch = 0
-        self.graph = g.pad_to_packets(packet)
-        self.num_vertices = g.num_vertices
-        self.dangling = jnp.asarray(self.graph.dangling)
-        self._outdeg = np.bincount(g.y, minlength=g.num_vertices).astype(np.int64)
-        self._full_device: Optional[Tuple[jnp.ndarray, ...]] = None
-        self._quantized: Dict[QFormat, jnp.ndarray] = {}
-        self._quantized_host: Dict[QFormat, np.ndarray] = {}   # unpadded uint32
-        if not self._defer_full_upload:
-            self._full()
-
-    def _full(self) -> Tuple[jnp.ndarray, ...]:
-        if self._full_device is None:
-            self._full_device = (jnp.asarray(self.graph.x),
-                                 jnp.asarray(self.graph.y),
-                                 jnp.asarray(self.graph.val))
-        return self._full_device
-
-    @property
-    def x(self) -> jnp.ndarray:
-        return self._full()[0]
-
-    @property
-    def y(self) -> jnp.ndarray:
-        return self._full()[1]
-
-    @property
-    def val(self) -> jnp.ndarray:
-        return self._full()[2]
-
-    def _quantize_host(self, fmt: QFormat) -> np.ndarray:
-        """Raw uint32 values of the *unpadded* edge stream (host-side cache —
-        the base incremental requantization patches on delta application)."""
-        if fmt not in self._quantized_host:
-            self._quantized_host[fmt] = self.source.quantized_val(fmt)
-        return self._quantized_host[fmt]
-
-    def quantized(self, fmt: QFormat) -> jnp.ndarray:
-        if fmt not in self._quantized:
-            raw = self._quantize_host(fmt)
-            pad = self.graph.num_edges - raw.shape[0]
-            if pad:
-                raw = np.concatenate([raw, np.zeros(pad, np.uint32)])
-            self._quantized[fmt] = jnp.asarray(raw)
-        return self._quantized[fmt]
-
-    # ---- delta ingestion --------------------------------------------------
-    def apply_delta(self, delta: EdgeDelta) -> EdgeMergeInfo:
-        """Merge an edge delta and refresh device state; bumps ``epoch``.
-
-        Pre-registered Q formats are requantized incrementally: surviving
-        edges keep their raw bits (copied through the merge's old→new index
-        map), only ``changed_mask`` entries — edges of sources whose
-        out-degree moved — go through the quantizer again.  The result is
-        bit-identical to quantizing the merged graph from scratch."""
-        new_g, info = delta.apply(self.source, outdeg=self._outdeg)
-        self._outdeg = info.new_outdeg
-        self.source = new_g
-        self.graph = new_g.pad_to_packets(self.packet)
-        self.num_vertices = new_g.num_vertices
-        self.dangling = jnp.asarray(self.graph.dangling)
-        for fmt, old_raw in list(self._quantized_host.items()):
-            new_raw = np.zeros(new_g.num_edges, np.uint32)
-            new_raw[info.new_pos_of_kept] = old_raw[info.kept_old_idx]
-            if info.changed_mask.any():
-                new_raw[info.changed_mask] = quantize_values(
-                    new_g.val[info.changed_mask], fmt)
-            self._quantized_host[fmt] = new_raw
-        for fmt in list(self._quantized):
-            del self._quantized[fmt]
-            self.quantized(fmt)                  # re-upload from patched host raw
-        materialized = self._full_device is not None
-        self._full_device = None
-        if materialized or not self._defer_full_upload:
-            self._full()
-        self.epoch += 1
-        return info
-
-    # ---- wave step construction (overridden by the sharded variant) -------
-    def float_step(self, alpha: float):
-        """callable(Vmat, P) → P_next for one float32 eq. (1) iteration."""
-        def step(Vmat, P):
-            return ppr_step_float(self.x, self.y, self.val, self.dangling,
-                                  Vmat, P, num_vertices=self.num_vertices,
-                                  alpha=alpha)
-        return step
-
-    def fixed_step(self, fmt: QFormat, alpha: float):
-        """callable(Vmat, P) → P_next, bit-exact in ``fmt``'s raw domain."""
-        body = make_ppr_fixed_step(fmt, self.num_vertices, alpha)
-        val_raw = self.quantized(fmt)
-
-        def step(Vmat, P):
-            return body(self.x, self.y, val_raw, self.dangling, Vmat, P)
-        return step
-
-
-class ShardedRegisteredGraph(RegisteredGraph):
-    """A registered graph whose edge stream is partitioned over a
-    ``jax.sharding.Mesh`` axis (the paper's multi-channel partitioning, scaled
-    to multi-device): waves on it run the sharded step bodies of
-    ``repro.core.ppr``.
-
-    The host owns the partitioning/packaging step (the CPU–FPGA synergy
-    argument of arXiv 2004.13907): edges are bucketed by destination range
-    once at registration — per quantized format too, through the same
-    dtype-preserving partitioner, so fixed-point shards are the exact raw
-    values the single-device path would stream.  The base class's full-layout
-    device arrays are deferred (see its docstring): only the float32 shadow
-    reference materializes them, on first sampled auto query.
-    """
-
-    _defer_full_upload = True
-
-    def __init__(self, name: str, g: COOGraph, mesh, axis: Optional[str] = None,
-                 packet: int = 256):
-        super().__init__(name, g, packet=packet)
-        self.mesh = mesh
-        self.axis = axis if axis is not None else mesh.axis_names[0]
-        if self.axis not in mesh.axis_names:
-            raise ValueError(f"mesh has no axis {self.axis!r} "
-                             f"(axes: {mesh.axis_names})")
-        self.n_shards = int(mesh.shape[self.axis])
-        self.mesh_key = f"mesh:{self.axis}x{self.n_shards}"
-        self._packet = packet
-        self._sharded_quantized: Dict[QFormat, jnp.ndarray] = {}
-        self._sharded_quant_host: Dict[QFormat, np.ndarray] = {}  # [S, max_e]
-        self._partition_all()
-
-    def _partition_all(self) -> None:
-        """(Re-)bucket the *unpadded* edge stream by destination range; pad
-        edges would only inflate shard 0 with zero slots the per-shard packet
-        padding already provides."""
-        sx, sy, sval = partition_edges_by_dst(
-            self.source.x, self.source.y, self.source.val,
-            self.num_vertices, self.n_shards, packet=self._packet)
-        s = self.n_shards
-        self._host_x = sx.reshape(s, -1)
-        self._host_y = sy.reshape(s, -1)
-        self._host_val = sval.reshape(s, -1)
-        self.sharded_x = jnp.asarray(sx)
-        self.sharded_y = jnp.asarray(sy)
-        self.sharded_val = jnp.asarray(sval)
-        for fmt in set(self._sharded_quantized) | set(self._sharded_quant_host):
-            _, _, sq = partition_edges_by_dst(
-                self.source.x, self.source.y, self._quantize_host(fmt),
-                self.num_vertices, self.n_shards, packet=self._packet)
-            self._sharded_quant_host[fmt] = sq.reshape(s, -1)
-            self._sharded_quantized[fmt] = jnp.asarray(sq)
-
-    def sharded_quantized(self, fmt: QFormat) -> jnp.ndarray:
-        """Raw uint32 edge shard values in the partitioned layout (cached)."""
-        if fmt not in self._sharded_quantized:
-            _, _, sval = partition_edges_by_dst(
-                self.source.x, self.source.y, self._quantize_host(fmt),
-                self.num_vertices, self.n_shards, packet=self._packet)
-            self._sharded_quant_host[fmt] = sval.reshape(self.n_shards, -1)
-            self._sharded_quantized[fmt] = jnp.asarray(sval)
-        return self._sharded_quantized[fmt]
-
-    def apply_delta(self, delta: EdgeDelta) -> EdgeMergeInfo:
-        """Delta ingestion on a meshed graph: re-partition only the
-        destination buckets that own a changed or removed edge.
-
-        Falls back to a full re-partition when the delta moves the bucket
-        geometry itself (vertex growth changing ``ceil(V / n_shards)``) or an
-        affected bucket outgrows the current per-shard padding."""
-        old_v_local, _ = sharded_vertex_layout(self.num_vertices, self.n_shards)
-        info = super().apply_delta(delta)     # merge + epoch + quantized host
-        v_local, _ = sharded_vertex_layout(self.num_vertices, self.n_shards)
-        max_e = self._host_x.shape[1]
-        shard_of = self.source.x // v_local
-        counts = np.bincount(shard_of, minlength=self.n_shards)
-        affected: Optional[np.ndarray] = \
-            np.unique(info.changed_dst // v_local).astype(np.int64)
-        if v_local != old_v_local or counts[affected].max(initial=0) > max_e:
-            self._partition_all()
-            return info
-        for s in affected:
-            m = shard_of == s
-            n = int(counts[s])
-            for host in (self._host_x, self._host_y, self._host_val):
-                host[s, :] = 0
-            self._host_x[s, :n] = self.source.x[m] % v_local
-            self._host_y[s, :n] = self.source.y[m]
-            self._host_val[s, :n] = self.source.val[m]
-            for fmt, hq in self._sharded_quant_host.items():
-                hq[s, :] = 0
-                hq[s, :n] = self._quantized_host[fmt][m]
-        self.sharded_x = jnp.asarray(self._host_x.reshape(-1))
-        self.sharded_y = jnp.asarray(self._host_y.reshape(-1))
-        self.sharded_val = jnp.asarray(self._host_val.reshape(-1))
-        for fmt, hq in self._sharded_quant_host.items():
-            self._sharded_quantized[fmt] = jnp.asarray(hq.reshape(-1))
-        return info
-
-    def float_step(self, alpha: float):
-        body = make_ppr_sharded_float_step(self.mesh, self.axis,
-                                           self.num_vertices, alpha)
-
-        def step(Vmat, P):
-            return body(self.sharded_x, self.sharded_y, self.sharded_val,
-                        self.dangling, Vmat, P)
-        return step
-
-    def fixed_step(self, fmt: QFormat, alpha: float):
-        body = make_ppr_sharded_fixed_step(fmt, self.mesh, self.axis,
-                                           self.num_vertices, alpha)
-        val_raw = self.sharded_quantized(fmt)
-
-        def step(Vmat, P):
-            return body(self.sharded_x, self.sharded_y, val_raw,
-                        self.dangling, Vmat, P)
-        return step
+def _deprecated(old: str, new: str) -> None:
+    warnings.warn(
+        f"PPRService.{old}() is deprecated and will be removed once the "
+        f"futures API has settled; use {new} instead",
+        DeprecationWarning, stacklevel=3)
 
 
 class PPRService:
-    """Facade: named graphs, κ-batched admission, cached ranked results,
-    adaptive precision (``precision="auto"``) and early-exit iterations."""
+    """Facade: named graphs on engine backends, κ-batched admission,
+    futures-based results, an LRU result cache, adaptive precision
+    (``precision="auto"``) and early-exit iterations."""
 
     def __init__(
         self,
@@ -391,7 +158,7 @@ class PPRService:
         """``warm_start`` seeds wave iterations from each personalization
         vertex's last converged column (True, or an int store capacity per
         graph) — pair it with ``early_exit`` so the shorter convergence
-        distance actually saves iterations.  ``prefetch`` arms the idle-pump
+        distance actually saves iterations.  ``prefetch`` arms the idle-poll
         cache warmer (True, or a ``PrefetchConfig``)."""
         self.kappa = kappa
         self.iterations = iterations
@@ -413,9 +180,9 @@ class PPRService:
         else:
             self._warm = None
         if prefetch is True:
-            self.prefetcher: Optional[Prefetcher] = Prefetcher()
+            self.prefetcher: Optional[Prefetcher] = Prefetcher(time_fn=time_fn)
         elif prefetch:
-            self.prefetcher = Prefetcher(prefetch)
+            self.prefetcher = Prefetcher(prefetch, time_fn=time_fn)
         else:
             self.prefetcher = None
         self._graphs: Dict[str, RegisteredGraph] = {}
@@ -425,48 +192,68 @@ class PPRService:
         self._cold_iters: Dict[Tuple[str, str], int] = {}
 
     # ------------------------------------------------------------------
-    def register_graph(self, name: str, g: COOGraph,
-                       formats: Sequence[Precision] = (),
+    def register_graph(self, name: str, g, formats: Sequence[Precision] = (),
                        packet: int = 256,
-                       mesh=None, mesh_axis: Optional[str] = None
-                       ) -> RegisteredGraph:
-        """Move a graph to the device; optionally pre-quantize for ``formats``.
+                       mesh=None, mesh_axis: Optional[str] = None,
+                       engine: Optional[str] = None) -> RegisteredGraph:
+        """Register a graph onto an engine family; optionally pre-quantize.
 
-        ``mesh`` (a ``jax.sharding.Mesh``) registers the graph *sharded*: the
-        edge stream is partitioned by destination range over ``mesh_axis``
-        (default: the mesh's first axis) at registration, and every wave on
-        the graph runs the sharded step bodies — same results, multi-device
-        bandwidth.  ``num_vertices`` need not divide the shard count.
+        ``engine`` names the backend family serving the graph's waves
+        (``repro.ppr_serving.engine.engine_families()``): "single" iterates
+        the full edge stream on one device, "sharded" partitions it by
+        destination range over ``mesh``/``mesh_axis`` at registration (same
+        results — bit-identical on the fixed path — multi-device bandwidth;
+        ``num_vertices`` need not divide the shard count).  Default: "sharded"
+        when a mesh is given, else "single".
 
         Re-registering an existing name invalidates that graph's cached
-        results, drops its still-pending queries (they were validated against
-        the old topology — their vertices may be out of range in the new one,
-        which JAX's scatter would silently ignore, serving garbage), and
-        resets its quality estimates — nothing from the old topology may be
-        served or steer the precision ladder."""
+        results, rejects its still-pending futures (they were validated
+        against the old topology — their vertices may be out of range in the
+        new one, which JAX's scatter would silently ignore, serving garbage),
+        and resets its quality estimates — nothing from the old topology may
+        be served or steer the precision ladder."""
+        family = engine if engine is not None else \
+            ("sharded" if mesh is not None else "single")
+        if family not in engine_families():
+            raise ValueError(f"unknown engine family {family!r} "
+                             f"(have {list(engine_families())})")
+        # family-level metadata resolves through any member: fixed-only
+        # plug-in families are legal and must be able to register
+        members = family_members(family)
+        needs_mesh = members[0].needs_mesh
+        if needs_mesh and mesh is None:
+            raise ValueError(f"engine {family!r} needs a mesh= at registration")
+        if not needs_mesh and mesh is not None:
+            raise ValueError(f"engine {family!r} runs single-device — drop "
+                             f"mesh= or pick a sharded family "
+                             f"(have {list(engine_families())})")
         if name in self._graphs:
             self.cache.invalidate(lambda key: key[0] == name)
-            self.scheduler.purge(lambda key: key[0] == name)
+            for _key, fut, _t, _d in self.scheduler.extract(
+                    lambda k: k[0] == name):
+                fut._reject(QueryRejected(
+                    f"graph {name!r} was re-registered: the pending query for "
+                    f"vertex {fut.query.vertex} was validated against the old "
+                    f"topology and cannot be served — resubmit it against the "
+                    f"new graph"))
             self.controller.forget_graph(name)
             if self._warm is not None:
                 self._warm.drop_graph(name)
             if self.prefetcher is not None:
                 self.prefetcher.drop_graph(name)
             self.telemetry.forget_graph_demand(name)
-        if mesh is None:
-            rg: RegisteredGraph = RegisteredGraph(name, g, packet=packet)
-        else:
-            rg = ShardedRegisteredGraph(name, g, mesh, axis=mesh_axis,
-                                        packet=packet)
+        rg: RegisteredGraph = members[0].make_graph(
+            name, g, packet=packet, mesh=mesh, mesh_axis=mesh_axis)
+        rg.engine_family = family
+        if not members[0].fixed:          # float member present: prepare it
+            members[0].prepare(rg)
+            rg.arm(members[0])
         for p in formats:
             fmt = normalize_precision(p)
             if fmt is not None:
-                # sharded waves read only the partitioned quantized values —
-                # skip the full-layout device upload for meshed graphs
-                if isinstance(rg, ShardedRegisteredGraph):
-                    rg.sharded_quantized(fmt)
-                else:
-                    rg.quantized(fmt)
+                fixed_engine = engine_for(family, True)
+                fixed_engine.prepare(rg, fmt)
+                rg.arm(fixed_engine)
         self._graphs[name] = rg
         return rg
 
@@ -490,15 +277,19 @@ class PPRService:
 
         The graph's epoch is bumped (cache keys and wave keys are
         epoch-tagged), and invalidation is *scoped*: only cache entries and
-        pending queries whose personalization vertex falls in the delta's
+        pending futures whose personalization vertex falls in the delta's
         affected frontier (touched vertices plus their in-neighbors — the
         one-hop, α-weighted blast radius) are dropped.  Everything else is
         retagged to the new epoch and keeps serving: entries outside the
         frontier see only multi-hop, α²-damped rank shifts, a bounded
         staleness the shadow quality estimator keeps scoring.  Surviving
-        pending queries move to the new epoch's wave keys with their
-        admission budgets intact — they launch against the new topology.
-        Autotune quality windows decay (soft evidence) rather than reset.
+        pending futures move to the new epoch's wave keys with their
+        admission budgets intact — they resolve against the new topology.
+        Frontier futures are *rejected* with a descriptive ``QueryRejected``
+        (never left forever-pending).  Autotune quality windows decay (soft
+        evidence) rather than reset.  The host merge is followed by each
+        armed engine's device refresh (incremental requantization upload,
+        per-bucket repartition), so the delta pays its device cost here.
 
         Returns a report dict (also folded into telemetry): epoch, edge
         counts, scoped-invalidation accounting, apply latency."""
@@ -509,7 +300,9 @@ class PPRService:
         t0 = self.time_fn()
         frontier = delta.affected_frontier(rg.source)
         fr = frozenset(int(v) for v in frontier)
-        rg.apply_delta(delta)
+        info = rg.apply_delta(delta)
+        for eng in rg.armed_engines():
+            eng.on_delta(rg, info)
         epoch = rg.epoch
 
         dropped_vertices: List[int] = []
@@ -525,12 +318,20 @@ class PPRService:
         cache_dropped, cache_retained = self.cache.remap(retag)
         moved = self.scheduler.extract(lambda k: k[0] == name)
         pending_dropped = pending_requeued = 0
-        for key, item, enqueued_at, deadline in moved:
-            if int(item.vertex) in fr:
+        for key, fut, enqueued_at, deadline in moved:
+            if int(fut.query.vertex) in fr:
                 pending_dropped += 1
+                fut._reject(QueryRejected(
+                    f"pending query for vertex {fut.query.vertex} on graph "
+                    f"{name!r} was invalidated by an edge delta (epoch "
+                    f"{epoch}): its personalization vertex is inside the "
+                    f"delta's affected frontier — resubmit to recompute on "
+                    f"the new topology"))
             else:
-                self.scheduler.submit((key[0], key[1], key[2], epoch), item,
-                                      deadline=deadline, now=enqueued_at)
+                new_key = (key[0], key[1], key[2], epoch)
+                fut._wave_key = new_key
+                self.scheduler.submit(new_key, fut, deadline=deadline,
+                                      now=enqueued_at)
                 pending_requeued += 1
         if self._warm is not None:
             self._warm.grow(name, rg.num_vertices)
@@ -576,13 +377,22 @@ class PPRService:
                 int(q.k), int(self.iterations), self.convergence is not None,
                 self._warm is not None)
 
-    def submit(self, q: PPRQuery) -> Optional[Recommendation]:
-        """Cache probe; on miss, enqueue for the next wave and return None.
+    # ------------------------------------------------------------------
+    # futures API
+    # ------------------------------------------------------------------
+    def submit(self, q: PPRQuery) -> PPRFuture:
+        """One query in, one ``PPRFuture`` out.
 
-        Validation happens *here*, not at wave launch: an invalid ``k`` that
-        only surfaced inside the wave's top-K (``k+1 > V``) would crash
-        ``pump()`` and lose every co-batched query's result — one bad query
-        must never poison a wave."""
+        A cache hit resolves the future before this returns (the fast path
+        skips the iteration pipeline entirely); a miss queues the future for
+        the next wave on its (graph, precision, mesh, epoch) stream — it
+        resolves when ``poll``/``flush`` (or the future's own ``result()``)
+        launches that wave.
+
+        Validation happens *here*, not at wave launch, and raises
+        synchronously: an invalid ``k`` that only surfaced inside the wave's
+        top-K (``k+1 > V``) would crash the wave and lose every co-batched
+        query's result — one bad query must never poison a wave."""
         if q.graph not in self._graphs:
             raise KeyError(f"graph {q.graph!r} is not registered "
                            f"(have {list(self._graphs)})")
@@ -600,51 +410,110 @@ class PPRService:
         pkey = self._resolve_precision(q)
         self.telemetry.record_query_vertex(q.graph, int(q.vertex),
                                            k=q.k, pkey=pkey)
+        fut = PPRFuture(q, self)
         hit = self.cache.get(self._cache_key(q, pkey))
         self.telemetry.record_cache(hit is not None)
         if hit is not None:
             verts, scores = hit
-            return Recommendation(q, verts.copy(), scores.copy(),
-                                  source="cache", precision=pkey)
-        self.scheduler.submit((q.graph, pkey, rg.mesh_key, rg.epoch), q,
-                              deadline=q.deadline)
-        return None
+            fut._resolve(Recommendation(q, verts.copy(), scores.copy(),
+                                        source="cache", precision=pkey))
+            return fut
+        key = (q.graph, pkey, rg.mesh_key, rg.epoch)
+        fut._wave_key = key
+        self.scheduler.submit(key, fut, deadline=q.deadline)
+        return fut
 
-    def pump(self, now: Optional[float] = None) -> List[Recommendation]:
-        """Launch every wave the admission policy considers ready.
+    def poll(self, now: Optional[float] = None) -> int:
+        """Launch every wave the admission policy considers ready; resolved
+        futures fire their callbacks.  Returns the number of waves launched.
 
-        An *idle* pump (nothing launchable) with a prefetcher armed instead
+        An *idle* poll (nothing launchable) with a prefetcher armed instead
         issues synthetic queries for predicted-hot uncached vertices and
-        launches them immediately; their results fill the cache but are never
-        returned — only real queries riding along in a prefetch wave are."""
-        return self._pump(now, allow_prefetch=True)
+        launches them immediately; their results fill the cache but resolve
+        no caller-visible futures."""
+        waves, _ = self._launch_ready(now, allow_prefetch=True)
+        return waves
 
-    def _pump(self, now: Optional[float],
-              allow_prefetch: bool) -> List[Recommendation]:
-        # serve() passes allow_prefetch=False: a synchronous batch whose
-        # queries all hit the cache must not pay a prefetch wave's latency —
-        # prefetch compute belongs to explicit (poll-loop) pump() calls
+    def run_batch(self, queries: Sequence[PPRQuery]) -> List[Recommendation]:
+        """Futures-native synchronous batch: submit every query first (so
+        full κ-waves form regardless of ``max_wait``), flush, and gather the
+        results in submission order.  The supported replacement for the
+        deprecated ``serve()`` when a caller wants blocking batch semantics
+        rather than holding the futures itself."""
+        futures = [self.submit(q) for q in queries]
+        self.flush()
+        return [f.result() for f in futures]
+
+    def flush(self) -> int:
+        """Launch everything pending regardless of occupancy (end-of-batch /
+        shutdown path); every pending future resolves.  Returns the number of
+        waves launched."""
+        waves = 0
+        for wave in self.scheduler.drain():
+            self._run_wave(wave)
+            waves += 1
+        return waves
+
+    def _drive(self, fut: PPRFuture) -> None:
+        """Resolve one pending future synchronously: launch the ready waves,
+        then flush the future's own wave if it is still queued."""
+        self._launch_ready(None, allow_prefetch=False)
+        if fut.done():
+            return
+        key = fut._wave_key
+        if key is not None:
+            for wave in self.scheduler.flush_keys({key}):
+                self._run_wave(wave)
+
+    def _launch_ready(self, now: Optional[float],
+                      allow_prefetch: bool) -> Tuple[int, List[Recommendation]]:
         recs: List[Recommendation] = []
+        waves = 0
         for wave in self.scheduler.ready_waves(now=now):
             recs.extend(self._run_wave(wave))
-        if not recs and allow_prefetch and self.prefetcher is not None:
-            recs.extend(self._prefetch_pump(now))
+            waves += 1
+        if not waves and allow_prefetch and self.prefetcher is not None:
+            pw, pr = self._prefetch_pump(now)
+            waves += pw
+            recs.extend(pr)
+        return waves, recs
+
+    # ------------------------------------------------------------------
+    # deprecated blocking wrappers (kept working over the futures path)
+    # ------------------------------------------------------------------
+    def serve(self, queries: Sequence[PPRQuery]) -> List[Recommendation]:
+        """Deprecated synchronous batch entry point: results in submission
+        order.  Thin wrapper over the futures-native ``run_batch``."""
+        _deprecated("serve", "run_batch() (or submit() + flush() + "
+                             "PPRFuture.result() to hold the futures)")
+        return self.run_batch(queries)
+
+    def pump(self, now: Optional[float] = None) -> List[Recommendation]:
+        """Deprecated: ``poll()`` with the launched waves' real (non-prefetch)
+        recommendations returned as a list."""
+        _deprecated("pump", "poll() + PPRFuture.add_done_callback()")
+        _, recs = self._launch_ready(now, allow_prefetch=True)
         return [r for r in recs if not r.query.prefetch]
 
     def drain(self) -> List[Recommendation]:
-        """Flush all pending queries regardless of occupancy."""
+        """Deprecated: ``flush()`` with the launched waves' real recommendations
+        returned as a list."""
+        _deprecated("drain", "flush() + PPRFuture.result()")
         recs: List[Recommendation] = []
         for wave in self.scheduler.drain():
             recs.extend(self._run_wave(wave))
         return [r for r in recs if not r.query.prefetch]
 
-    def _prefetch_pump(self, now: Optional[float]) -> List[Recommendation]:
+    # ------------------------------------------------------------------
+    def _prefetch_pump(self, now: Optional[float]
+                       ) -> Tuple[int, List[Recommendation]]:
         """Issue + immediately launch synthetic queries for hot uncached
         vertices, under the cache key real traffic probes: each vertex's last
         real (k, resolved precision) when known — auto traffic records its
         post-resolution format, so that matches what the controller would
         resolve next — else the config's k at the controller's current rung."""
         cfg = self.prefetcher.config
+        now_s = self.time_fn() if now is None else now
         keys = set()
         issued = 0
         for name, rg in self._graphs.items():
@@ -652,6 +521,8 @@ class PPRService:
                 break
             counts = self.telemetry.query_vertex_counts.get(name, {})
             last = self.telemetry.query_vertex_last.get(name, {})
+            self.prefetcher.decay_demand(name, counts, now=now_s,
+                                         last_seen=last)
             for v in self.prefetcher.candidates(name, counts,
                                                 cfg.max_per_pump - issued):
                 if not 0 <= v < rg.num_vertices:
@@ -665,52 +536,28 @@ class PPRService:
                 if self._cache_key(q, pkey) in self.cache:
                     continue                  # membership probe: counter-free
                 key = (name, pkey, rg.mesh_key, rg.epoch)
-                self.scheduler.submit(key, q, now=now)
+                fut = PPRFuture(q, self)
+                fut._wave_key = key
+                self.scheduler.submit(key, fut, now=now)
                 keys.add(key)
                 issued += 1
         if not issued:
-            return []
+            return 0, []
         self.prefetcher.issued += issued
         self.telemetry.record_prefetch(issued)
         recs: List[Recommendation] = []
+        waves = 0
         for wave in self.scheduler.flush_keys(keys):
             recs.extend(self._run_wave(wave))
-        return recs
-
-    def serve(self, queries: Sequence[PPRQuery]) -> List[Recommendation]:
-        """Synchronous batch entry point: results in submission order.
-
-        Waves complete out of submission order when precisions or graphs mix
-        (each (graph, precision) group fills independently), so results are
-        matched back by query identity, not queue position.
-        """
-        from collections import defaultdict, deque
-
-        out: Dict[int, Recommendation] = {}
-        slot: Dict[int, deque] = defaultdict(deque)   # id(query) → indices FIFO
-        # Admit the whole batch before pumping so full κ-waves form regardless
-        # of max_wait (submit-then-pump per query would flush 1-query partials
-        # whenever max_wait=0).
-        for i, q in enumerate(queries):
-            rec = self.submit(q)
-            if rec is not None:
-                out[i] = rec
-            else:
-                slot[id(q)].append(i)
-        # Queries queued via submit() before this serve() call ride along in
-        # the same waves; their results are cached/telemetered but belong to
-        # no slot here, so route only our own.
-        for rec in self._pump(None, allow_prefetch=False) + self.drain():
-            idxs = slot.get(id(rec.query))
-            if idxs:
-                out[idxs.popleft()] = rec
-        return [out[i] for i in range(len(queries))]
+            waves += 1
+        return waves, recs
 
     def telemetry_summary(self) -> Dict[str, float]:
         """Telemetry counters (cache_* = submit-path view) plus the LRU's own
         stats under lru_* — the two diverge once anything touches the cache
-        outside submit() (e.g. a future async prefetcher) — plus the precision
-        controller's ladder counters under autotune_*."""
+        outside submit() (e.g. the prefetcher) — plus the precision
+        controller's ladder counters under autotune_* and per-engine wave
+        latency stats under engine_*."""
         s = self.telemetry.summary()
         s.update({f"lru_{k}": v for k, v in self.cache.stats().items()})
         s.update({f"autotune_{k}": v for k, v in self.controller.summary().items()})
@@ -722,26 +569,14 @@ class PPRService:
         return s
 
     # ------------------------------------------------------------------
-    def _iterate(self, step, P0, *, fixed: bool, scale: Optional[int]):
-        """Drive one wave's iterations; early-exit when a policy is armed."""
-        if self.convergence is None:
-            P = P0
-            for _ in range(self.iterations):
-                P = step(P)
-            return P, self.iterations
-        P, iters_run, _ = run_until_converged(
-            step, P0, self.iterations, self.convergence, fixed=fixed,
-            scale=scale, track_deltas=False)   # trace unused: skip its syncs
-        return P, iters_run
-
     def _warm_seed(self, rg: RegisteredGraph, wave: Wave, pkey: str,
                    Vmat) -> Tuple[jnp.ndarray, int]:
         """``(P0, warm columns)``: the wave's start state, with each column
         whose personalization vertex has a stored converged column seeded from
         it instead of the one-hot restart."""
         seeds = []
-        for col, q in enumerate(wave.items):
-            s = self._warm.get(rg.name, int(q.vertex), pkey)
+        for col, fut in enumerate(wave.items):
+            s = self._warm.get(rg.name, int(fut.query.vertex), pkey)
             if s is not None and s.shape[0] == rg.num_vertices:
                 seeds.append((col, s))
         if not seeds:
@@ -762,28 +597,30 @@ class PPRService:
         self._wave_counter += 1
         wave_id = self._wave_counter
 
-        verts = [int(q.vertex) for q in wave.items]
+        # the graph's engine family decides how its waves iterate; arming
+        # keeps late-bound engines in the delta device-refresh loop
+        engine = engine_for(rg.engine_family, fmt is not None)
+        rg.arm(engine)
+        plan = engine.plan(rg, fmt, alpha=self.alpha,
+                           iterations=self.iterations,
+                           convergence=self.convergence,
+                           topk_tile=self.topk_tile)
+
+        queries = [fut.query for fut in wave.items]
+        verts = [int(q.vertex) for q in queries]
         pad = self.kappa - len(verts)
         padded = verts + [verts[0]] * pad           # pad columns are discarded
         pers = jnp.asarray(np.asarray(padded, np.int32))
 
-        # the graph decides how its waves iterate: single-device or mesh-sharded
-        if fmt is None:
-            Vmat = personalization_matrix(rg.num_vertices, pers)
-            step = rg.float_step(self.alpha)
-        else:
-            Vmat = personalization_matrix_fixed(rg.num_vertices, pers, fmt)
-            step = rg.fixed_step(fmt, self.alpha)
+        Vmat = plan.initial(pers)
         P0, warm_cols = (self._warm_seed(rg, wave, pkey, Vmat)
                          if self._warm is not None else (Vmat, 0))
-        P, iters_run = self._iterate(
-            lambda P_: step(Vmat, P_), P0, fixed=fmt is not None,
-            scale=None if fmt is None else fmt.scale)
+        P, iters_run = plan.iterate(lambda P_: plan.step(Vmat, P_), P0)
         if iters_run < self.iterations:
             self.telemetry.record_early_exit(self.iterations - iters_run)
         if self._warm is not None:
             P_host = np.asarray(P)
-            for col, q in enumerate(wave.items):
+            for col, q in enumerate(queries):
                 self._warm.put(graph_name, int(q.vertex), pkey,
                                P_host[:, col].copy())
             if warm_cols:
@@ -793,30 +630,29 @@ class PPRService:
             else:
                 self._cold_iters[(graph_name, pkey)] = iters_run
 
-        k_max = max(q.k for q in wave.items)
-        if self.topk_tile is not None:
-            idx, vals = topk_streaming(P, k_max, v_tile=self.topk_tile,
-                                       exclude=pers)
-        else:
-            idx, vals = topk_dense(P, k_max, exclude=pers)
+        k_max = max(q.k for q in queries)
+        idx, vals = plan.topk(P, k_max, pers)
         idx = np.asarray(idx)                        # [κ, k_max]
         vals = np.asarray(vals)
-        scores = vals.astype(np.float64) / fmt.scale if fmt is not None \
+        scores = vals.astype(np.float64) / plan.scale if plan.fixed \
             else vals.astype(np.float64)
         latency = self.time_fn() - t0
 
         recs = []
-        for col, q in enumerate(wave.items):
+        for col, fut in enumerate(wave.items):
+            q = fut.query
             v_top = idx[col, : q.k].copy()
             s_top = scores[col, : q.k].copy()
             # the cache keeps its own copies: callers may mutate their
             # Recommendation arrays without poisoning later hits
             self.cache.put(self._cache_key(q, pkey), (v_top.copy(), s_top.copy()))
-            recs.append(Recommendation(q, v_top, s_top, source="wave",
-                                       wave_id=wave_id, latency_s=latency,
-                                       precision=pkey))
+            rec = Recommendation(q, v_top, s_top, source="wave",
+                                 wave_id=wave_id, latency_s=latency,
+                                 precision=pkey)
+            fut._resolve(rec)
+            recs.append(rec)
         self.telemetry.record_wave(len(wave.items), self.kappa, latency, pkey,
-                                   mesh_key=mesh_key)
+                                   mesh_key=mesh_key, engine=plan.engine)
         self._shadow_feedback(wave, rg, fmt, pkey, P)
         return recs
 
@@ -833,14 +669,18 @@ class PPRService:
         reference, so ``shadow_quality_mean`` reflects *all* sampled auto
         traffic, not just the fixed-point share.
 
-        The float32 reference runs only over the sampled columns — shadow
-        cost genuinely scales with ``sample_fraction`` rather than being paid
-        per wave.  (Each distinct sampled-column count compiles its own
-        ``ppr_float`` variant; there are at most κ of them.)
+        The float32 reference runs through the graph's own float engine —
+        on a sharded graph it stays on the mesh (the deferred full-layout
+        upload is the memory pressure mesh registration exists to avoid; the
+        sharded float step is numerically equal to the single-device one,
+        tests/test_sharded_serving.py) — and only over the sampled columns,
+        so shadow cost genuinely scales with ``sample_fraction`` rather than
+        being paid per wave.
         """
         estimator = self.controller.estimator
-        sampled = [(col, q) for col, q in enumerate(wave.items)
-                   if q.precision == AUTO_KEY and estimator.should_sample()]
+        sampled = [(col, fut.query) for col, fut in enumerate(wave.items)
+                   if fut.query.precision == AUTO_KEY
+                   and estimator.should_sample()]
         if not sampled:
             return
         if fmt is None:
@@ -851,21 +691,17 @@ class PPRService:
             return
         pers_sub = jnp.asarray(
             np.asarray([int(q.vertex) for _, q in sampled], np.int32))
-        if isinstance(rg, ShardedRegisteredGraph):
-            # keep the reference on the mesh: running it through the full
-            # single-device stream would force the deferred full-layout
-            # upload onto one device — the memory pressure mesh registration
-            # exists to avoid.  The sharded float step is numerically equal
-            # to ppr_float (tests/test_sharded_serving.py).
-            Vref = personalization_matrix(rg.num_vertices, pers_sub)
-            ref_step = rg.float_step(self.alpha)
-            P_ref = Vref
-            for _ in range(self.iterations):
-                P_ref = ref_step(Vref, P_ref)
-        else:
-            P_ref, _ = ppr_float(rg.x, rg.y, rg.val, rg.dangling, pers_sub,
-                                 num_vertices=rg.num_vertices,
-                                 iterations=self.iterations, alpha=self.alpha)
+        try:
+            float_engine = engine_for(rg.engine_family, False)
+        except KeyError:
+            return      # fixed-only family: no float datapath for a reference
+        rg.arm(float_engine)
+        ref_plan = float_engine.plan(rg, None, alpha=self.alpha,
+                                     iterations=self.iterations)
+        Vref = ref_plan.initial(pers_sub)
+        P_ref = Vref
+        for _ in range(self.iterations):
+            P_ref = ref_plan.step(Vref, P_ref)
         ref = np.asarray(P_ref, np.float64)
         approx = np.asarray(P, np.float64) / fmt.scale
         for j, (col, q) in enumerate(sampled):

@@ -36,6 +36,9 @@ class ServiceTelemetry:
         self.wave_latencies_s: List[float] = []
         self.wave_occupancies: List[float] = []
         self.wave_precisions: List[str] = []
+        # engine-backend layer: which concrete engine served each wave, and
+        # its latencies — the observability of the pluggable datapath seam
+        self.wave_latencies_by_engine: Dict[str, List[float]] = {}
         self.queries_served = 0
         self.cache_hits = 0
         self.cache_misses = 0
@@ -68,7 +71,11 @@ class ServiceTelemetry:
 
     # ------------------------------------------------------------------
     def record_wave(self, n_queries: int, kappa: int, latency_s: float,
-                    precision: str, mesh_key: str = SINGLE_DEVICE_KEY) -> None:
+                    precision: str, mesh_key: str = SINGLE_DEVICE_KEY,
+                    engine: Optional[str] = None) -> None:
+        if engine is not None:
+            self.wave_latencies_by_engine.setdefault(engine, []).append(
+                float(latency_s))
         self.wave_latencies_s.append(float(latency_s))
         self.wave_occupancies.append(n_queries / float(kappa))
         self.wave_precisions.append(precision)
@@ -199,4 +206,21 @@ class ServiceTelemetry:
             out[f"waves_{mkey}"] = n
         for mkey, n in sorted(self.queries_by_mesh.items()):
             out[f"queries_{mkey}"] = n
+        for ekey, stats in sorted(self.engine_stats().items()):
+            for stat, v in stats.items():
+                out[f"engine_{ekey}_{stat}"] = v
+        return out
+
+    def engine_stats(self) -> Dict[str, Dict[str, float]]:
+        """Per-engine wave-latency stats: count / mean / p95 per concrete
+        engine key — the observability of the backend layer (which datapath
+        served what, and how fast)."""
+        out: Dict[str, Dict[str, float]] = {}
+        for ekey, lats in self.wave_latencies_by_engine.items():
+            a = np.asarray(lats, np.float64)
+            out[ekey] = {
+                "waves": int(a.size),
+                "latency_mean_s": float(a.mean()) if a.size else 0.0,
+                "latency_p95_s": float(np.percentile(a, 95)) if a.size else 0.0,
+            }
         return out

@@ -1,0 +1,95 @@
+"""API-surface snapshot: the public names + signatures of `repro.ppr_serving`
+asserted against a checked-in manifest, so any future API drift (a renamed
+method, a changed default, a dropped export) is an explicit diff in review
+instead of a silent break for downstream users of the serving API.
+
+Regenerate after an *intentional* API change:
+
+    PYTHONPATH=src python tests/test_api_surface.py --write
+"""
+import difflib
+import inspect
+import os
+import sys
+
+MANIFEST = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                        "api_surface_ppr_serving.txt")
+
+
+def _sig(fn) -> str:
+    try:
+        return str(inspect.signature(fn))
+    except (TypeError, ValueError):   # pragma: no cover - C-level callables
+        return "(...)"
+
+
+def _class_lines(name, cls):
+    lines = [f"class {name}{_sig(cls.__init__)}"]
+    # repo-defined public attributes across the MRO (inherited repo methods
+    # are part of the surface users see; builtin machinery is not)
+    members = {}
+    for klass in reversed(cls.__mro__):
+        if klass.__module__.split(".")[0] != "repro":
+            continue
+        for attr, value in vars(klass).items():
+            if not attr.startswith("_"):
+                members[attr] = value
+    for attr in sorted(members):
+        value = members[attr]
+        if isinstance(value, property):
+            lines.append(f"  {attr}: property")
+        elif isinstance(value, (classmethod, staticmethod)):
+            lines.append(f"  {attr}{_sig(value.__func__)} "
+                         f"[{type(value).__name__}]")
+        elif callable(value):
+            lines.append(f"  {attr}{_sig(value)}")
+        else:
+            lines.append(f"  {attr} = {value!r}")
+    return lines
+
+
+def build_manifest() -> str:
+    import repro.ppr_serving as pkg
+
+    lines = [
+        "# Public API surface of repro.ppr_serving (generated — do not edit).",
+        "# Regenerate after an intentional API change:",
+        "#   PYTHONPATH=src python tests/test_api_surface.py --write",
+        "",
+    ]
+    for name in sorted(pkg.__all__):
+        obj = getattr(pkg, name)
+        if inspect.isclass(obj):
+            lines.extend(_class_lines(name, obj))
+        elif callable(obj):
+            lines.append(f"def {name}{_sig(obj)}")
+        else:
+            lines.append(f"{name} = {obj!r}")
+    return "\n".join(lines) + "\n"
+
+
+def test_ppr_serving_api_surface_matches_manifest():
+    current = build_manifest()
+    assert os.path.exists(MANIFEST), (
+        f"missing API manifest {MANIFEST} — generate it with "
+        f"'PYTHONPATH=src python tests/test_api_surface.py --write'")
+    with open(MANIFEST) as f:
+        committed = f.read()
+    if current != committed:
+        diff = "\n".join(difflib.unified_diff(
+            committed.splitlines(), current.splitlines(),
+            fromfile="committed manifest", tofile="current API", lineterm=""))
+        raise AssertionError(
+            "repro.ppr_serving's public API drifted from the committed "
+            "manifest.  If the change is intentional, regenerate with "
+            "'PYTHONPATH=src python tests/test_api_surface.py --write' and "
+            "commit the diff.\n" + diff)
+
+
+if __name__ == "__main__":
+    if "--write" in sys.argv:
+        with open(MANIFEST, "w") as f:
+            f.write(build_manifest())
+        print(f"wrote {MANIFEST}")
+    else:
+        print(build_manifest(), end="")

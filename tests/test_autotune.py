@@ -408,10 +408,13 @@ def test_register_graph_drops_pending_queries_for_old_topology(graph):
     drop them and serve garbage)."""
     svc = PPRService(kappa=8, iterations=5)        # κ=8: the query stays queued
     svc.register_graph("g", graph)                 # |V| = 300
-    assert svc.submit(PPRQuery("g", 299, k=5)) is None
+    fut = svc.submit(PPRQuery("g", 299, k=5))
+    assert not fut.done()
     svc.register_graph("g", erdos_renyi(100, 600, seed=1))   # vertex 299 gone
     assert svc.scheduler.pending() == 0
     assert svc.drain() == []                       # nothing stale launches
+    # the pending future was rejected descriptively, not left dangling
+    assert fut.done() and fut.exception() is not None
 
 
 def test_cache_key_separates_budget_and_early_exit_numerics(graph):

@@ -24,10 +24,16 @@ def test_example_compiles(path):
 
 
 def test_quickstart_runs_end_to_end():
+    """The quickstart is ported to the futures API: it must run end-to-end
+    with DeprecationWarning escalated to an error, so a regression back onto
+    the deprecated serve()/pump()/drain() wrappers fails loudly.  The filter
+    is scoped to __main__ (where the wrappers' stacklevel attributes the
+    warning) so unrelated jax/numpy deprecations cannot fail the smoke."""
     env = dict(os.environ)
     env["PYTHONPATH"] = os.path.join(ROOT, "src")
     out = subprocess.run(
-        [sys.executable, os.path.join(ROOT, "examples", "quickstart.py")],
+        [sys.executable, "-W", "error::DeprecationWarning:__main__",
+         os.path.join(ROOT, "examples", "quickstart.py")],
         capture_output=True, text=True, env=env, timeout=600)
     assert out.returncode == 0, f"stdout:\n{out.stdout}\nstderr:\n{out.stderr}"
     assert "delta applied" in out.stdout

@@ -1,0 +1,309 @@
+"""Futures-based serving API + engine-backend layer: PPRFuture lifecycle
+(cache-hit fast path, deadline flush, delta epoch bump, purge rejection,
+callbacks, driving result()), wrapper-vs-futures equivalence, the engine
+registry, and per-engine telemetry."""
+import warnings
+
+import numpy as np
+import pytest
+
+from repro.graphs import erdos_renyi, holme_kim_powerlaw
+from repro.graph_updates import EdgeDelta, localized_delta
+from repro.ppr_serving import (
+    PPRFuture,
+    PPRQuery,
+    PPRService,
+    QueryRejected,
+    WaveEngine,
+    engine_families,
+    engine_for,
+    engine_names,
+    get_engine,
+)
+
+
+@pytest.fixture(scope="module")
+def graph():
+    return holme_kim_powerlaw(400, m=4, seed=2)
+
+
+class FakeClock:
+    def __init__(self):
+        self.t = 0.0
+
+    def __call__(self):
+        return self.t
+
+
+# ---------------------------------------------------------------------------
+# PPRFuture lifecycle
+# ---------------------------------------------------------------------------
+def test_cache_hit_fast_path_resolves_before_submit_returns(graph):
+    svc = PPRService(kappa=2, iterations=4)
+    svc.register_graph("g", graph)
+    first = svc.submit(PPRQuery("g", 7, k=5))
+    assert not first.done()
+    assert first.result().source == "wave"       # result() drives the service
+    again = svc.submit(PPRQuery("g", 7, k=5))
+    assert again.done()                          # resolved inside submit()
+    rec = again.result()
+    assert rec.source == "cache"
+    np.testing.assert_array_equal(rec.vertices, first.result().vertices)
+    # a done future's result is idempotent and never re-drives
+    assert again.result() is rec
+    assert again.exception() is None
+
+
+def test_deadline_flush_resolves_batched_futures(graph):
+    """A partial wave's futures resolve when the admission budget expires and
+    poll() launches the deadline flush."""
+    clk = FakeClock()
+    svc = PPRService(kappa=8, iterations=4, max_wait=1.0, time_fn=clk)
+    svc.register_graph("g", graph)
+    futs = [svc.submit(PPRQuery("g", v, k=5)) for v in (3, 9, 11)]
+    assert svc.poll() == 0                       # budget not yet spent
+    assert not any(f.done() for f in futs)
+    clk.t = 1.5
+    assert svc.poll() == 1                       # one partial wave flushed
+    assert all(f.done() for f in futs)
+    recs = [f.result() for f in futs]
+    assert all(r.source == "wave" for r in recs)
+    assert {r.wave_id for r in recs} == {recs[0].wave_id}   # co-batched
+
+
+def test_result_timeout_zero_is_a_nonblocking_probe(graph):
+    svc = PPRService(kappa=8, iterations=4)
+    svc.register_graph("g", graph)
+    fut = svc.submit(PPRQuery("g", 5, k=5))
+    with pytest.raises(TimeoutError):
+        fut.result(timeout=0)
+    assert not fut.done()                        # the probe did not drive
+    assert fut.result().source == "wave"         # a real result() still works
+
+
+def test_result_drives_only_its_own_wave_key(graph):
+    """result() on a pending future flushes that future's wave; co-queued
+    queries on *other* keys stay pending (no global drain).  max_wait keeps
+    the partial waves un-ready, so only the targeted flush launches."""
+    svc = PPRService(kappa=8, iterations=4, max_wait=100.0)
+    svc.register_graph("g", graph, formats=[26])
+    f_fixed = svc.submit(PPRQuery("g", 3, k=5, precision=26))
+    f_float = svc.submit(PPRQuery("g", 9, k=5))
+    assert f_fixed.result().source == "wave"
+    assert not f_float.done()                    # float key untouched
+    assert f_float.result().source == "wave"
+
+
+def test_add_done_callback_immediate_deferred_and_swallowed(graph):
+    svc = PPRService(kappa=1, iterations=3)
+    svc.register_graph("g", graph)
+    seen = []
+    fut = svc.submit(PPRQuery("g", 5, k=5))
+    fut.add_done_callback(lambda f: seen.append(("deferred", f.done())))
+    fut.add_done_callback(lambda f: 1 / 0)       # must be swallowed
+    assert seen == []
+    svc.flush()
+    assert seen == [("deferred", True)]
+    fut.add_done_callback(lambda f: seen.append(("immediate", f.done())))
+    assert seen[-1] == ("immediate", True)
+
+
+def test_apply_delta_epoch_bump_with_pending_future(graph):
+    """Satellite: a pending future outside the delta's frontier survives the
+    epoch bump and resolves against the new topology; a frontier future is
+    rejected descriptively instead of dangling."""
+    svc = PPRService(kappa=8, iterations=4)
+    svc.register_graph("g", graph)
+    d = localized_delta(graph, np.random.default_rng(3), n_add=2, n_remove=1)
+    frontier = set(int(v) for v in d.affected_frontier(graph))
+    in_f = sorted(frontier)[0]
+    out_f = next(v for v in range(graph.num_vertices) if v not in frontier)
+    f_in = svc.submit(PPRQuery("g", in_f, k=5))
+    f_out = svc.submit(PPRQuery("g", out_f, k=5))
+    svc.apply_delta("g", d)
+    assert f_in.done()
+    with pytest.raises(QueryRejected, match="affected frontier"):
+        f_in.result()
+    assert isinstance(f_in.exception(), QueryRejected)
+    assert not f_out.done()
+    rec = f_out.result()                         # resolves on the new epoch
+    assert rec.source == "wave"
+    epoch_keys = [k for k in svc.cache._store if k[2] == out_f]
+    assert epoch_keys and all(k[1] == 1 for k in epoch_keys)
+
+
+def test_reregistration_rejects_pending_futures_descriptively(graph):
+    """Satellite: purge on re-registration rejects pending futures with a
+    descriptive error instead of leaving them forever-pending."""
+    svc = PPRService(kappa=8, iterations=4)
+    svc.register_graph("g", graph)
+    fut = svc.submit(PPRQuery("g", 42, k=5))
+    callback_state = []
+    fut.add_done_callback(lambda f: callback_state.append(type(f.exception())))
+    svc.register_graph("g", erdos_renyi(100, 600, seed=1))
+    assert fut.done()
+    assert callback_state == [QueryRejected]
+    with pytest.raises(QueryRejected, match="re-registered"):
+        fut.result()
+
+
+def test_flush_resolves_everything_and_counts_waves(graph):
+    svc = PPRService(kappa=2, iterations=3)
+    svc.register_graph("g", graph, formats=[26])
+    futs = [svc.submit(PPRQuery("g", v, k=5, precision=p))
+            for v, p in ((1, 26), (2, 26), (3, None), (4, 26))]
+    # two full/partial fixed waves' worth + one float partial
+    assert svc.flush() == 3
+    assert all(f.done() for f in futs)
+    assert svc.flush() == 0                      # nothing left
+
+
+# ---------------------------------------------------------------------------
+# deprecated wrappers: behaviour preserved, warning emitted, results identical
+# ---------------------------------------------------------------------------
+def _futures_batch(svc, queries):
+    futures = [svc.submit(q) for q in queries]
+    svc.flush()
+    return [f.result() for f in futures]
+
+
+def test_run_batch_is_the_supported_batch_entry_point(graph):
+    """run_batch (futures-native, no DeprecationWarning) returns the same
+    submission-order results the deprecated serve() wrapper does."""
+    svc = PPRService(kappa=4, iterations=6)
+    svc.register_graph("g", graph, formats=[26])
+    stream = [PPRQuery("g", v, k=5, precision=p)
+              for v in (1, 2, 3) for p in (26, None)]
+    with warnings.catch_warnings():
+        warnings.simplefilter("error", DeprecationWarning)
+        recs = svc.run_batch(stream)
+    assert [r.query for r in recs] == stream
+    svc2 = PPRService(kappa=4, iterations=6)
+    svc2.register_graph("g", graph, formats=[26])
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", DeprecationWarning)
+        recs2 = svc2.serve(stream)
+    for a, b in zip(recs, recs2):
+        np.testing.assert_array_equal(a.vertices, b.vertices)
+        np.testing.assert_array_equal(a.scores, b.scores)
+
+
+def test_wrappers_emit_deprecation_warning(graph):
+    svc = PPRService(kappa=2, iterations=3)
+    svc.register_graph("g", graph)
+    with pytest.warns(DeprecationWarning, match="serve"):
+        svc.serve([PPRQuery("g", 1, k=5)])
+    with pytest.warns(DeprecationWarning, match="pump"):
+        svc.pump()
+    with pytest.warns(DeprecationWarning, match="drain"):
+        svc.drain()
+
+
+def test_wrappers_match_futures_path_on_same_query_stream(graph):
+    """Acceptance: serve()/pump()/drain() return the identical Recommendation
+    lists the futures path produces for the same query stream."""
+    rng = np.random.default_rng(0)
+    verts = rng.integers(0, graph.num_vertices, 12)
+    stream = [PPRQuery("g", int(v), k=8, precision=p)
+              for v in verts for p in (26, None)]
+
+    svc_new = PPRService(kappa=4, iterations=6)
+    svc_new.register_graph("g", graph, formats=[26])
+    recs_new = _futures_batch(svc_new, stream)
+
+    svc_old = PPRService(kappa=4, iterations=6)
+    svc_old.register_graph("g", graph, formats=[26])
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", DeprecationWarning)
+        recs_old = svc_old.serve(stream)
+
+    assert len(recs_new) == len(recs_old) == len(stream)
+    for a, b in zip(recs_new, recs_old):
+        assert a.query is not b.query or a.query == b.query
+        np.testing.assert_array_equal(a.vertices, b.vertices)
+        np.testing.assert_array_equal(a.scores, b.scores)
+        assert a.source == b.source and a.precision == b.precision
+
+    # pump()/drain() wrappers return exactly what the launched waves resolved
+    q = PPRQuery("g", int(verts[0]), k=8, precision=26)   # cached by now
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", DeprecationWarning)
+        f = svc_old.submit(PPRQuery("g", 17, k=8))
+        drained = svc_old.drain()
+    assert [r.query.vertex for r in drained] == [17]
+    assert f.result() is drained[0]
+    assert svc_old.submit(q).result().source == "cache"
+
+
+# ---------------------------------------------------------------------------
+# engine registry + per-engine telemetry
+# ---------------------------------------------------------------------------
+def test_engine_registry_names_families_and_lookup():
+    assert set(engine_names()) >= {"float", "fixed",
+                                   "sharded_float", "sharded_fixed"}
+    assert set(engine_families()) >= {"single", "sharded"}
+    assert isinstance(get_engine("float"), WaveEngine)
+    assert engine_for("single", False).key == "float"
+    assert engine_for("single", True).key == "fixed"
+    assert engine_for("sharded", False).key == "sharded_float"
+    assert engine_for("sharded", True).key == "sharded_fixed"
+    with pytest.raises(KeyError, match="no engine"):
+        get_engine("warp_drive")
+    with pytest.raises(KeyError, match="no engine family"):
+        engine_for("warp", False)
+
+
+def test_register_graph_engine_selection_and_validation(graph):
+    svc = PPRService(kappa=2, iterations=3)
+    rg = svc.register_graph("g", graph, engine="single")
+    assert rg.engine_family == "single"
+    with pytest.raises(ValueError, match="unknown engine family"):
+        svc.register_graph("h", graph, engine="warp")
+    with pytest.raises(ValueError, match="needs a mesh"):
+        svc.register_graph("h", graph, engine="sharded")
+    # serving still works through the explicitly selected family
+    assert svc.submit(PPRQuery("g", 3, k=5)).result().source == "wave"
+
+
+def test_fixed_only_plugin_family_registers_and_serves(graph):
+    """A plug-in family with no float member is legal: family metadata
+    resolves through any member, registration and fixed waves work, and the
+    shadow path degrades gracefully (no float reference to run)."""
+    from repro.ppr_serving import FixedEngine, family_members
+    from repro.ppr_serving.engine import base as engine_base
+
+    @engine_base.register_engine
+    class TestOnlyFixed(FixedEngine):
+        key = "test_fixed_only"
+        family = "test_fixedonly"
+
+    try:
+        assert [e.key for e in family_members("test_fixedonly")] == \
+            ["test_fixed_only"]
+        svc = PPRService(kappa=2, iterations=4)
+        rg = svc.register_graph("g", graph, formats=[26],
+                                engine="test_fixedonly")
+        assert rg.engine_family == "test_fixedonly"
+        rec = svc.submit(PPRQuery("g", 3, k=5, precision=26)).result()
+        assert rec.source == "wave" and rec.precision == "Q1.25"
+        t = svc.telemetry_summary()
+        assert t["engine_test_fixed_only_waves"] == 1
+    finally:
+        engine_base._ENGINES.pop("test_fixed_only", None)
+        engine_base._FAMILIES.pop("test_fixedonly", None)
+
+
+def test_per_engine_wave_latency_telemetry(graph):
+    svc = PPRService(kappa=2, iterations=3)
+    svc.register_graph("g", graph, formats=[26])
+    _futures_batch(svc, [PPRQuery("g", v, k=5, precision=26) for v in (1, 2)])
+    _futures_batch(svc, [PPRQuery("g", v, k=5) for v in (3, 4, 5, 6)])
+    t = svc.telemetry_summary()
+    assert t["engine_fixed_waves"] == 1
+    assert t["engine_float_waves"] == 2
+    for ekey in ("fixed", "float"):
+        assert t[f"engine_{ekey}_latency_mean_s"] > 0
+        assert t[f"engine_{ekey}_latency_p95_s"] >= \
+            t[f"engine_{ekey}_latency_mean_s"] * 0.5
+    stats = svc.telemetry.engine_stats()
+    assert stats["float"]["waves"] == 2

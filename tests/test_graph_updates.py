@@ -19,7 +19,7 @@ from repro.graph_updates import (
     random_delta,
 )
 from repro.graphs import erdos_renyi, holme_kim_powerlaw
-from repro.ppr_serving import PPRQuery, PPRService, PrefetchConfig
+from repro.ppr_serving import PPRQuery, PPRService, PrefetchConfig, Prefetcher
 
 ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
@@ -242,14 +242,19 @@ def test_scoped_purge_of_pending_queries(graph):
     frontier = set(int(v) for v in d.affected_frontier(graph))
     in_f = sorted(frontier)[0]
     out_f = next(v for v in range(graph.num_vertices) if v not in frontier)
-    assert svc.submit(PPRQuery("g", in_f, k=5)) is None
-    assert svc.submit(PPRQuery("g", out_f, k=5)) is None
+    fut_in = svc.submit(PPRQuery("g", in_f, k=5))
+    fut_out = svc.submit(PPRQuery("g", out_f, k=5))
+    assert not fut_in.done() and not fut_out.done()
     report = svc.apply_delta("g", d)
     assert report["pending_dropped"] == 1
     assert report["pending_requeued"] == 1
     assert svc.scheduler.pending() == 1
+    # the frontier future is rejected descriptively; the survivor stays pending
+    assert fut_in.done() and fut_in.exception() is not None
+    assert not fut_out.done()
     recs = svc.drain()
     assert len(recs) == 1 and recs[0].query.vertex == out_f
+    assert fut_out.result() is recs[0]
     # the survivor computed on the NEW topology and cached at the new epoch
     assert svc.serve([PPRQuery("g", out_f, k=5)])[0].source == "cache"
 
@@ -415,11 +420,96 @@ def test_prefetch_results_never_returned_but_real_riders_are(graph):
     svc.serve([PPRQuery("g", 5, k=5, precision="auto")])   # makes 5 "hot"
     svc.cache.invalidate(lambda k: True)
     # a real query waits in the queue (max_wait keeps it pending)...
-    assert svc.submit(PPRQuery("g", 5, k=5, precision="auto")) is None
+    assert not svc.submit(PPRQuery("g", 5, k=5, precision="auto")).done()
     # ...until the idle pump's prefetch flush takes its key's queue along
     recs = svc.pump()
     assert [r.query.prefetch for r in recs] == [False]
     assert recs[0].query.vertex == 5 and recs[0].source == "wave"
+
+
+class FakeClock:
+    def __init__(self):
+        self.t = 0.0
+
+    def __call__(self):
+        return self.t
+
+
+def test_prefetcher_demand_decay_unit_clock_injected():
+    """counts halve per half-life (clock injected); fully-cooled entries are
+    pruned; no configured half-life means the legacy cumulative counts."""
+    clk = FakeClock()
+    p = Prefetcher(PrefetchConfig(half_life_s=10.0), time_fn=clk)
+    counts = {1: 8.0, 2: 0.08}
+    last_seen = {1: (10, "Q1.25"), 2: (5, "f32")}
+    p.decay_demand("g", counts, last_seen=last_seen)   # no time elapsed
+    assert counts == {1: 8.0, 2: 0.08}
+    clk.t = 10.0
+    p.decay_demand("g", counts, last_seen=last_seen)   # exactly one half-life
+    assert counts[1] == pytest.approx(4.0)
+    assert 2 not in counts                 # cooled below the floor → pruned
+    assert last_seen == {1: (10, "Q1.25")}  # (k, pkey) map pruned in lockstep
+    clk.t = 30.0
+    p.decay_demand("g", counts)            # two more half-lives
+    assert counts[1] == pytest.approx(1.0)
+    # out-of-order `now` never rewinds the stamp and over-ages later decays
+    p.decay_demand("g", counts, now=5.0)
+    assert counts[1] == pytest.approx(1.0)
+    p.decay_demand("g", counts, now=40.0)  # one half-life since t=30, not 35
+    assert counts[1] == pytest.approx(0.5)
+    # a graph never decayed before ages from the prefetcher's construction
+    # stamp, so the FIRST idle poll after a quiet stretch already decays
+    clk.t = 0.0
+    cold = Prefetcher(PrefetchConfig(half_life_s=10.0), time_fn=clk)
+    stale = {7: 8.0}
+    clk.t = 30.0
+    cold.decay_demand("h", stale)          # three half-lives since construction
+    assert stale[7] == pytest.approx(1.0)
+    # decay state is per graph: "h" ages from p's construction stamp (t=0 →
+    # clk.t=30, three half-lives), not from "g"'s later stamp at t=40
+    other = {5: 8.0}
+    p.decay_demand("h", other)
+    assert other == {5: pytest.approx(1.0)}
+    p.drop_graph("g")
+    assert "g" not in p._last_decay
+    # no half-life configured → decay is a no-op
+    legacy = Prefetcher(PrefetchConfig(), time_fn=clk)
+    c = {1: 5}
+    legacy.decay_demand("g", c)
+    clk.t = 1e9
+    legacy.decay_demand("g", c)
+    assert c == {1: 5}
+    with pytest.raises(ValueError, match="half_life_s"):
+        PrefetchConfig(half_life_s=0.0)
+
+
+def test_prefetch_demand_decay_ages_out_stale_hotness(graph):
+    """Satellite: a vertex hot long ago must stop ranking hot — under a
+    half-life, idle polls decay the demand counts before ranking, so stale
+    traffic no longer earns prefetch compute."""
+    clk = FakeClock()
+    svc = PPRService(kappa=2, iterations=4, time_fn=clk,
+                     prefetch=PrefetchConfig(top_n=4, k=5, max_per_pump=4,
+                                             min_count=2, half_life_s=10.0))
+    svc.register_graph("g", graph, formats=[26])
+    for _ in range(2):                     # vertex 3 becomes hot (count 2)
+        svc.submit(PPRQuery("g", 3, k=5, precision="auto")).result()
+    svc.cache.invalidate(lambda k: True)
+    assert svc.poll() == 1                 # idle poll at t=0: 3 is prefetched
+    issued = svc.telemetry_summary()["prefetch_issued"]
+    assert issued == 1
+    # 20 half-lives later the old demand has fully cooled and been pruned
+    clk.t = 200.0
+    svc.cache.invalidate(lambda k: True)
+    assert svc.poll() == 0                 # nothing hot → nothing issued
+    assert svc.telemetry_summary()["prefetch_issued"] == issued
+    assert svc.telemetry.query_vertex_counts["g"] == {}
+    # fresh traffic re-heats under the decayed regime
+    for _ in range(2):
+        svc.submit(PPRQuery("g", 7, k=5, precision="auto")).result()
+    svc.cache.invalidate(lambda k: True)
+    assert svc.poll() == 1                 # recent hotness still prefetches
+    assert svc.telemetry_summary()["prefetch_issued"] == issued + 1
 
 
 # ---------------------------------------------------------------------------

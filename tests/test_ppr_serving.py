@@ -405,7 +405,7 @@ def test_service_deadline_flush_via_pump(graph):
     clk = FakeClock()
     svc = PPRService(kappa=8, iterations=5, max_wait=1.0, time_fn=clk)
     svc.register_graph("g", graph)
-    assert svc.submit(PPRQuery("g", 42, k=5)) is None
+    assert not svc.submit(PPRQuery("g", 42, k=5)).done()
     assert svc.pump() == []                  # budget not yet spent
     clk.t = 1.5
     recs = svc.pump()
@@ -420,11 +420,12 @@ def test_service_serve_with_stale_submitted_query(graph):
     svc = PPRService(kappa=4, iterations=5)
     svc.register_graph("g", graph)
     stale = PPRQuery("g", 250, k=5)
-    assert svc.submit(stale) is None
+    assert not svc.submit(stale).done()
     verts = [1, 2, 3, 4]
     recs = svc.serve([PPRQuery("g", v, k=5) for v in verts])
     assert [r.query.vertex for r in recs] == verts
-    assert svc.submit(stale).source == "cache"   # stale query was computed
+    # stale query was computed along the way
+    assert svc.submit(stale).result().source == "cache"
 
 
 def test_service_cache_immune_to_caller_mutation(graph):
@@ -459,7 +460,7 @@ def test_submit_validates_k_so_one_bad_query_cannot_poison_a_wave(graph):
     svc.register_graph("g", graph)
     # three good queries enqueue...
     for v in (3, 17, 42):
-        assert svc.submit(PPRQuery("g", v, k=10)) is None
+        assert not svc.submit(PPRQuery("g", v, k=10)).done()
     # ...the bad ones are rejected at the door, in every invalid shape
     for bad_k in (0, -7, V, V + 3):
         with pytest.raises(ValueError, match="k"):

@@ -173,6 +173,51 @@ def test_service_mesh_vs_single_device_topk():
     """))
 
 
+def test_fixed_engine_vs_sharded_fixed_engine_raw_uint32_equality():
+    """Acceptance (engine layer): `FixedEngine` and `ShardedFixedEngine` plans
+    driven over the same graph produce bit-identical raw uint32 state and
+    identical top-K on non-divisible V — the backend seam did not perturb the
+    datapath."""
+    print(_run("""
+        import jax, jax.numpy as jnp, numpy as np
+        from repro.core.fixed_point import Q1_25
+        from repro.graphs import holme_kim_powerlaw
+        from repro.ppr_serving import PPRService, engine_for
+        from repro.ppr_serving.graphs import (RegisteredGraph,
+                                              ShardedRegisteredGraph)
+
+        V = 389                                        # prime: no shard count divides it
+        g = holme_kim_powerlaw(V, m=4, seed=3)
+        mesh = jax.make_mesh((8,), ("shard",))
+        rg_single = RegisteredGraph("g", g)
+        rg_sharded = ShardedRegisteredGraph("g", g, mesh)
+        fixed = engine_for("single", True)
+        sharded = engine_for("sharded", True)
+        assert fixed.key == "fixed" and sharded.key == "sharded_fixed"
+
+        plans = [eng.plan(rg, Q1_25, alpha=0.85, iterations=10)
+                 for eng, rg in ((fixed, rg_single), (sharded, rg_sharded))]
+        pers = jnp.asarray([0, 17, 200, 388], jnp.int32)
+        states = []
+        for plan in plans:
+            assert plan.fixed and plan.scale == Q1_25.scale
+            Vmat = plan.initial(pers)
+            P, iters = plan.iterate(lambda P_: plan.step(Vmat, P_), Vmat)
+            assert iters == 10
+            states.append(np.asarray(P))
+        assert states[0].dtype == states[1].dtype == np.uint32
+        np.testing.assert_array_equal(states[0], states[1])   # raw bit equality
+
+        tops = [plan.topk(jnp.asarray(s), 10, pers)
+                for plan, s in zip(plans, states)]
+        np.testing.assert_array_equal(np.asarray(tops[0][0]),
+                                      np.asarray(tops[1][0]))
+        np.testing.assert_array_equal(np.asarray(tops[0][1]),
+                                      np.asarray(tops[1][1]))
+        print("engine raw parity OK")
+    """))
+
+
 def test_sharded_graph_pre_quantizes_shards_and_purges_on_reregister():
     """register_graph(formats=[...], mesh=...) pre-partitions quantized shard
     values; re-registration drops the meshed graph's pending queries (3-part
@@ -189,7 +234,7 @@ def test_sharded_graph_pre_quantizes_shards_and_purges_on_reregister():
         rg = svc.register_graph("g", g, formats=[26], mesh=mesh)
         assert Q1_25 in rg._sharded_quantized          # pre-partitioned at registration
 
-        assert svc.submit(PPRQuery("g", 3, k=5, precision=26)) is None
+        assert not svc.submit(PPRQuery("g", 3, k=5, precision=26)).done()
         assert svc.scheduler.pending() == 1
         svc.register_graph("g", g, formats=[26], mesh=mesh)
         assert svc.scheduler.pending() == 0            # purge saw the 3-part key
