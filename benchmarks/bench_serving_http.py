@@ -1,0 +1,200 @@
+"""Latency-under-load bench for the HTTP serving tier (BENCH_serving_http).
+
+A closed-loop or open-loop traffic generator drives the real asyncio server
+over real sockets at ≥2 offered-load levels and records the control plane's
+response: admitted-request latency (p50/p95), shed rate past the high-water
+mark, SLO quality degradation under sustained overload, and the recovery
+transitions once load drops — the serving analogue of the paper's
+throughput-vs-precision tables, with the precision dial turned *by load*.
+
+    PYTHONPATH=src python benchmarks/bench_serving_http.py [--scale 0.02] [--dry-run]
+
+Arrival modes:
+  closed  N concurrent "users", each issuing its next request only after the
+          previous response — offered load self-limits to service capacity,
+          so this is the un-shed baseline row.
+  open    requests fired at a target rate regardless of completions (the
+          "millions of users" shape) — offered load exceeds capacity, the
+          queue builds, and the shed/degrade/deepen escalation engages.
+
+Output is the house ``name,us_per_call,derived`` CSV (us_per_call = mean
+per-admitted-request wall time).
+"""
+from __future__ import annotations
+
+import argparse
+import asyncio
+import time
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.graphs import holme_kim_powerlaw
+from repro.ppr_serving import (AdmissionConfig, PPRHTTPServer, PPRQuery,
+                               PPRService)
+from repro.ppr_serving.http import AsyncHTTPClient, http_request
+
+#: (mode, offered) levels — closed: concurrent users; open: requests/s
+LEVELS: Tuple[Tuple[str, int], ...] = (("closed", 4), ("open", 100),
+                                       ("open", 400))
+
+
+def _admission(kappa: int) -> AdmissionConfig:
+    """Water marks in waves'-worth of queries, scaled from κ so the same
+    escalation story holds at any batch depth."""
+    return AdmissionConfig(
+        high_water=3 * kappa, low_water=kappa // 2 or 1,
+        deepen_water=kappa, kappa_max=4 * kappa,
+        degrade_water=2 * kappa, degrade_low_water=kappa // 2 or 1,
+        degraded_target=0.93, retry_after_s=0.05)
+
+
+async def _drain(host: str, port: int, timeout_s: float = 30.0) -> bool:
+    """Poll /v1/healthz until the queue is empty and shed/degrade have
+    recovered — the 'load drops' half of the SLO story."""
+    t0 = time.perf_counter()
+    while time.perf_counter() - t0 < timeout_s:
+        _, _, h = await http_request(host, port, "GET", "/v1/healthz")
+        if h["queue_depth"] == 0 and not h["shedding"] and not h["degrading"]:
+            return True
+        await asyncio.sleep(0.02)
+    return False
+
+
+async def _run_level(g, mode: str, offered: int, n_requests: int,
+                     kappa: int, iterations: int, seed: int) -> Dict:
+    svc = PPRService(kappa=kappa, iterations=iterations, max_wait=0.002,
+                     cache_capacity=0)          # measure compute, not cache
+    svc.register_graph("g", g, formats=[26])
+    # warm the jit caches outside the timed window (base κ; deepened κ
+    # shapes compile mid-overload, which the open-loop rows absorb as real
+    # first-hit cost)
+    svc.run_batch([PPRQuery("g", v, k=10, precision="auto")
+                   for v in range(min(kappa, g.num_vertices))])
+    svc.telemetry.reset()
+    server = PPRHTTPServer(svc, admission=_admission(kappa),
+                           pump_interval_s=0.002)
+    await server.start()
+    host, port = server.host, server.port
+
+    rng = np.random.default_rng(seed)
+    vertices = rng.integers(0, g.num_vertices, n_requests)
+    latencies: List[float] = []        # admitted (HTTP 200) only
+    statuses: List[int] = []
+    degraded_served = 0
+
+    def _body(v) -> Dict:
+        return {"graph": "g", "vertex": int(v), "k": 10,
+                "precision": "auto", "quality_target": 0.95}
+
+    async def _one(client: Optional[AsyncHTTPClient], v) -> None:
+        nonlocal degraded_served
+        t0 = time.perf_counter()
+        if client is not None:
+            status, _, payload = await client.request("POST", "/v1/ppr",
+                                                      _body(v))
+        else:
+            status, _, payload = await http_request(host, port, "POST",
+                                                    "/v1/ppr", _body(v))
+        statuses.append(status)
+        if status == 200:
+            latencies.append(time.perf_counter() - t0)
+            degraded_served += bool(payload.get("degraded"))
+
+    t_start = time.perf_counter()
+    if mode == "closed":
+        clients = [AsyncHTTPClient(host, port) for _ in range(offered)]
+        chunks = np.array_split(vertices, offered)
+
+        async def _user(client, verts):
+            for v in verts:
+                await _one(client, v)
+
+        await asyncio.gather(*[_user(c, ch)
+                               for c, ch in zip(clients, chunks)])
+        for c in clients:
+            await c.close()
+    elif mode == "open":
+        interval = 1.0 / offered
+
+        async def _arrival(i, v):
+            await asyncio.sleep(i * interval)
+            await _one(None, v)
+
+        await asyncio.gather(*[_arrival(i, v)
+                               for i, v in enumerate(vertices)])
+    else:
+        raise ValueError(f"unknown arrival mode {mode!r}")
+    elapsed = time.perf_counter() - t_start
+
+    recovered = await _drain(host, port)
+    _, _, stats = await http_request(host, port, "GET", "/v1/stats")
+    await server.stop()
+
+    lat = np.asarray(latencies, np.float64)
+    ok = int(lat.size)
+    return {
+        "mode": mode,
+        "offered": offered,            # users (closed) or req/s (open)
+        "requests": n_requests,
+        "admitted": ok,
+        "shed": statuses.count(429),
+        "elapsed_s": elapsed,
+        "admitted_per_s": ok / elapsed if elapsed else 0.0,
+        "latency_p50_ms": float(np.percentile(lat, 50) * 1e3) if ok else 0.0,
+        "latency_p95_ms": float(np.percentile(lat, 95) * 1e3) if ok else 0.0,
+        "degraded_served": int(degraded_served),
+        "recovered": bool(recovered),
+        "queue_depth_peak": stats["queue_depth_peak"],
+        "queries_shed": stats["queries_shed"],
+        "shed_engaged_events": stats["shed_engaged_events"],
+        "shed_recovered_events": stats["shed_recovered_events"],
+        "slo_degrade_events": stats["slo_degrade_events"],
+        "slo_degraded_queries": stats["slo_degraded_queries"],
+        "slo_recover_events": stats["slo_recover_events"],
+        "kappa_deepen_events": stats["kappa_deepen_events"],
+        "kappa_relax_events": stats["kappa_relax_events"],
+        "V": g.num_vertices,
+        "E": g.num_edges,
+    }
+
+
+def run(scale: float = 0.02, n_requests: int = 128, kappa: int = 4,
+        iterations: int = 10, levels=LEVELS, seed: int = 0) -> List[Dict]:
+    g = holme_kim_powerlaw(max(128, int(128000 * scale)), m=3, seed=1)
+    rows = []
+    for mode, offered in levels:
+        rows.append(asyncio.run(_run_level(
+            g, mode, offered, n_requests, kappa, iterations, seed)))
+    return rows
+
+
+def main(scale: float = 0.02, dry_run: bool = False):
+    if dry_run:
+        # one un-shed closed row + one overload open row: the minimum that
+        # still demonstrates shed-above-high-water AND degrade/recover
+        rows = run(scale=0.005, n_requests=48, kappa=2, iterations=4,
+                   levels=(("closed", 2), ("open", 400)))
+    else:
+        rows = run(scale=scale)
+    print("# serving_http: name,us_per_call,derived")
+    for r in rows:
+        us = (1e6 * r["elapsed_s"] / r["admitted"]) if r["admitted"] else 0.0
+        print(f"http_{r['mode']}{r['offered']},{us:.0f},"
+              f"admitted={r['admitted']}/{r['requests']}"
+              f";shed={r['shed']}"
+              f";p50_ms={r['latency_p50_ms']:.1f}"
+              f";p95_ms={r['latency_p95_ms']:.1f}"
+              f";degraded={r['degraded_served']}"
+              f";recovered={int(r['recovered'])}"
+              f";depth_peak={r['queue_depth_peak']}")
+    return rows
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--scale", type=float, default=0.02)
+    ap.add_argument("--dry-run", action="store_true",
+                    help="tiny graph, two load levels — the CI smoke path")
+    args = ap.parse_args()
+    main(scale=args.scale, dry_run=args.dry_run)

@@ -27,8 +27,8 @@ from typing import Any
 import numpy as np
 
 from benchmarks import (bench_accuracy, bench_autotune, bench_convergence,
-                        bench_graph_updates, bench_ppr, bench_serving_ppr,
-                        bench_sharded_serving, bench_spmv)
+                        bench_graph_updates, bench_ppr, bench_serving_http,
+                        bench_serving_ppr, bench_sharded_serving, bench_spmv)
 from benchmarks import roofline_report
 
 
@@ -93,6 +93,8 @@ def main() -> None:
          lambda: bench_sharded_serving.main(scale=scale, dry_run=dry)),
         ("graph_updates", "bench_graph_updates (delta apply latency, warm vs cold iterations, scoped invalidation)",
          lambda: bench_graph_updates.main(scale=scale, dry_run=dry)),
+        ("serving_http", "bench_serving_http (HTTP tier: latency under load, shed/degrade/recover)",
+         lambda: bench_serving_http.main(scale=scale, dry_run=dry)),
         ("roofline", "roofline (dry-run artifacts; EXPERIMENTS.md section Roofline)",
          lambda: roofline_report.main()),
     ]

@@ -18,6 +18,7 @@ echo "== examples smoke (ported to the futures API, deprecation-clean) =="
 # scoping the filter to __main__ catches exactly the example's own usage
 # without tripping on unrelated import-time warnings from jax/numpy
 python -W error::DeprecationWarning:__main__ examples/quickstart.py
+python -W error::DeprecationWarning:__main__ examples/http_serving.py
 
 echo "== smoke + baselines: benchmark sweep (dry run, JSON into repo root) =="
 # --check gates the sweep: every ran section must leave a fresh parseable

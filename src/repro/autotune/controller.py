@@ -85,6 +85,7 @@ class PrecisionController:
         self._formats: Tuple[QFormat, ...] = tuple(
             format_for_bits(b) for b in config.ladder)
         self._states: Dict[Tuple[str, float], _RungState] = {}
+        self._target_ceiling: Optional[float] = None
         self.promotions = 0
         self.demotions = 0
 
@@ -93,7 +94,30 @@ class PrecisionController:
         t = self.config.default_target if target is None else float(target)
         if not 0.0 < t <= 1.0:
             raise ValueError(f"quality target must be in (0, 1], got {t}")
+        if self._target_ceiling is not None:
+            t = min(t, self._target_ceiling)
         return round(t, 6)
+
+    @property
+    def target_ceiling(self) -> Optional[float]:
+        """The SLO-degradation ceiling currently capping every effective
+        quality target, or None when serving at requested quality."""
+        return self._target_ceiling
+
+    def set_target_ceiling(self, ceiling: Optional[float]) -> None:
+        """Temporarily cap effective quality targets (SLO-aware degradation:
+        a deep admission queue trades NDCG target for wave latency).
+
+        While set, every ``resolve``/``observe_*`` maps its requested target
+        through ``min(target, ceiling)`` — so degraded traffic walks its own
+        (graph, degraded-target) ladder, whose rung may be a cheaper format,
+        and shadow feedback gathered under the ceiling steers that ladder
+        rather than polluting the full-quality one.  ``None`` lifts the cap;
+        the full-quality ladders resume exactly where they left off."""
+        if ceiling is not None and not 0.0 < float(ceiling) <= 1.0:
+            raise ValueError(f"target ceiling must be in (0, 1] or None, "
+                             f"got {ceiling}")
+        self._target_ceiling = None if ceiling is None else float(ceiling)
 
     def _state(self, graph: str, target: Optional[float]) -> _RungState:
         key = (graph, self._target(target))

@@ -42,6 +42,12 @@ def _parse_args(argv=None):
                          "(N>1 implies the sharded step bodies)")
     ap.add_argument("--topk", type=int, default=10,
                     help="with --serve: recommendations per query")
+    ap.add_argument("--http", type=int, default=None, metavar="PORT",
+                    help="serve the graph over HTTP on PORT (0 = ephemeral): "
+                         "asyncio tier with admission control, load shedding "
+                         "and SLO-aware quality degradation; runs until "
+                         "interrupted (POST /v1/ppr, GET /v1/healthz, "
+                         "GET /v1/stats)")
     ap.add_argument("--replay-deltas", type=int, default=0, metavar="N",
                     help="dynamic-updates mode: serve a Zipf-ish query mix, "
                          "then replay N random edge-delta rounds against the "
@@ -81,6 +87,9 @@ def main():
     fmt = None if args.use_float else format_for_bits(args.bits)
     label = "float32" if fmt is None else fmt.name
 
+    if args.http is not None:
+        _serve_http(args, g, fmt, label)
+        return
     if args.replay_deltas:
         _replay_deltas(args, g, fmt, label)
         return
@@ -151,6 +160,41 @@ def _serve(args, g, vertices, fmt, label):
             print(f"  {k:28s} {v:.5f}" if isinstance(v, float) else
                   f"  {k:28s} {v}")
     return None
+
+
+def _serve_http(args, g, fmt, label):
+    """HTTP serving mode: the registered graph behind the asyncio tier.
+
+    Auto-precision is always armed (the SLO degradation path needs the
+    controller); an explicit --bits additionally pre-quantizes that format so
+    explicit-precision requests skip the first-touch quantization upload."""
+    import asyncio
+
+    from repro.ppr_serving import PPRHTTPServer, PPRService
+
+    svc = PPRService(kappa=args.kappa, iterations=args.iterations,
+                     alpha=args.alpha, max_wait=0.005, early_exit=True)
+    svc.register_graph(args.graph, g, formats=[] if fmt is None else [fmt])
+    server = PPRHTTPServer(svc, port=args.http)
+
+    async def _run():
+        await server.start()
+        print(f"{label}: serving graph {args.graph!r} "
+              f"(|V|={g.num_vertices:,}) on http://{server.host}:{server.port}")
+        print(f"  POST /v1/ppr      "
+              f'{{"graph": "{args.graph}", "vertex": 0, "k": {args.topk}, '
+              f'"precision": "auto"}}')
+        print("  GET  /v1/healthz  liveness + queue depth")
+        print("  GET  /v1/stats    telemetry + admission counters")
+        try:
+            await asyncio.Event().wait()
+        finally:
+            await server.stop()
+
+    try:
+        asyncio.run(_run())
+    except KeyboardInterrupt:
+        print("\nshutting down")
 
 
 def _replay_deltas(args, g, fmt, label):

@@ -77,6 +77,15 @@ iteration seeding from each vertex's last converged column
 (``warm_start=True``) so the convergence monitor exits waves early after an
 update.
 
+The HTTP serving tier (``repro.ppr_serving.http``) fronts the futures API
+over a network: an asyncio pump drives ``poll()`` on deadline, ``POST
+/v1/ppr`` maps onto ``submit()`` and awaits the ``PPRFuture``, and an
+admission controller meters overload in escalating order — deepen κ
+(backpressure batching), degrade ``precision="auto"`` quality targets
+(SLO-aware: serve 0.93 instead of 0.95 while the queue is deep), then shed
+with 429 + Retry-After past the high-water mark — every decision counted in
+telemetry and surfaced by ``/v1/stats``.
+
 ``prefetch.py`` closes the ROADMAP's async-prefetch follow-on: during idle
 polls the service issues synthetic queries for predicted-hot uncached
 personalization vertices at the precision controller's currently resolved
@@ -101,6 +110,13 @@ from repro.ppr_serving.engine import (
     register_engine,
 )
 from repro.ppr_serving.futures import PPRFuture, QueryRejected
+from repro.ppr_serving.http import (
+    AdmissionConfig,
+    AdmissionController,
+    PPRHTTPServer,
+    ServingApp,
+    WavePump,
+)
 from repro.ppr_serving.graphs import RegisteredGraph, ShardedRegisteredGraph
 from repro.ppr_serving.prefetch import PrefetchConfig, Prefetcher
 from repro.ppr_serving.scheduler import Wave, WaveScheduler
@@ -118,6 +134,8 @@ from repro.ppr_serving.topk import topk_dense, topk_streaming
 
 __all__ = [
     "PPRService", "PPRQuery", "Recommendation", "PPRFuture", "QueryRejected",
+    "PPRHTTPServer", "ServingApp", "AdmissionConfig", "AdmissionController",
+    "WavePump",
     "RegisteredGraph", "ShardedRegisteredGraph",
     "WaveEngine", "WavePlan",
     "register_engine", "get_engine", "engine_for", "family_members",

@@ -26,7 +26,18 @@ __all__ = ["PPRFuture", "QueryRejected"]
 
 class QueryRejected(RuntimeError):
     """A pending query's future can never resolve (graph re-registered, or a
-    delta invalidated the query's personalization vertex) — resubmit."""
+    delta invalidated the query's personalization vertex) — resubmit.
+
+    ``code`` names the rejection class machine-readably so transports can map
+    it without parsing the message: ``"graph-replaced"`` (re-registration —
+    the HTTP tier serves 410 Gone) or ``"delta-invalidated"`` (epoch bump
+    caught the pending vertex in its frontier — HTTP 409 Conflict, resubmit
+    against the new topology).  The default ``"rejected"`` covers plug-in
+    rejection paths."""
+
+    def __init__(self, message: str, code: str = "rejected"):
+        super().__init__(message)
+        self.code = code
 
 
 class PPRFuture:

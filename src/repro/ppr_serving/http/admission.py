@@ -1,0 +1,150 @@
+"""Admission control for the HTTP serving tier — the load knobs, in order.
+
+The service values low latency over exact convergence (the paper's whole
+premise), so overload is met with *graceful degradation*, escalating as the
+admission queue deepens:
+
+1. **Deepen κ** (``deepen_water``): batch more personalization columns per
+   wave before anything is refused — one edge-stream pass amortized over 2κ
+   queries is the paper's own economics, bought at a modest per-wave latency
+   cost.  Doublings only (each distinct κ compiles its own wave shapes),
+   capped at ``kappa_max``; relaxes on the same thresholds going down.
+2. **Degrade quality** (``degrade_water``): impose a quality-target ceiling
+   on ``precision="auto"`` resolution (serve ``degraded_target`` — e.g. 0.93
+   — instead of the requested 0.95), the serving-side turn of the paper's
+   precision/quality dial.  Lifts at ``degrade_low_water`` (hysteresis).
+3. **Shed** (``high_water``): reject new arrivals with HTTP 429 +
+   ``Retry-After`` so admitted traffic keeps a bounded p95 instead of
+   everyone timing out together.  Stops shedding only once the queue drains
+   below ``low_water`` — the gap is what keeps shedding from flapping at the
+   boundary.
+
+Every decision is counted in ``ServiceTelemetry`` (the ``queries_shed`` /
+``slo_*`` / ``kappa_*`` counters and the queue gauges), so ``/v1/stats`` is
+the full audit trail of what quality was traded when, and whether it
+recovered.
+
+The controller is transport-independent: it only needs a ``PPRService`` (its
+``queue_depth``/``set_kappa``/``degrade_quality``/``restore_quality`` hooks)
+and a clock — unit tests drive it with a fake depth signal and no sockets.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional
+
+__all__ = ["AdmissionConfig", "AdmissionController"]
+
+
+@dataclasses.dataclass(frozen=True)
+class AdmissionConfig:
+    """Water marks are admission-queue depths (pending queries).  Defaults
+    suit a κ=8 service; scale them with κ — the useful mental unit is
+    "waves' worth of queries queued"."""
+    high_water: int = 64           # shed new arrivals above this depth
+    low_water: int = 16            # stop shedding once drained to this
+    deepen_water: int = 16         # start deepening κ at this depth
+    kappa_max: int = 64            # ceiling for deepened κ
+    degrade_water: int = 32        # impose the quality ceiling above this
+    degrade_low_water: int = 8     # lift it once drained to this
+    degraded_target: float = 0.93  # the stepped-down quality target served
+    retry_after_s: float = 0.1     # hint on 429 responses
+
+    def __post_init__(self):
+        if not 0 < self.low_water <= self.high_water:
+            raise ValueError(
+                f"need 0 < low_water <= high_water, got "
+                f"{self.low_water}/{self.high_water}")
+        if not 0 < self.degrade_low_water <= self.degrade_water:
+            raise ValueError(
+                f"need 0 < degrade_low_water <= degrade_water, got "
+                f"{self.degrade_low_water}/{self.degrade_water}")
+        if self.deepen_water < 1:
+            raise ValueError(f"deepen_water must be >= 1, "
+                             f"got {self.deepen_water}")
+        if self.kappa_max < 1:
+            raise ValueError(f"kappa_max must be >= 1, got {self.kappa_max}")
+        if not 0.0 < self.degraded_target <= 1.0:
+            raise ValueError(f"degraded_target must be in (0, 1], "
+                             f"got {self.degraded_target}")
+        if self.retry_after_s <= 0:
+            raise ValueError(f"retry_after_s must be > 0, "
+                             f"got {self.retry_after_s}")
+
+
+class AdmissionController:
+    """Hysteretic shed/degrade/deepen state machine over the service's
+    queue-depth signal."""
+
+    def __init__(self, service, config: AdmissionConfig = AdmissionConfig()):
+        self.service = service
+        self.config = config
+        self.base_kappa = service.kappa
+        if config.kappa_max < self.base_kappa:
+            raise ValueError(
+                f"kappa_max={config.kappa_max} is below the service's base "
+                f"kappa={self.base_kappa} — the controller only deepens")
+        self.shedding = False
+        self.degrading = False
+        self.admitted = 0
+        self.shed = 0
+
+    # ------------------------------------------------------------------
+    def target_kappa(self, depth: int) -> int:
+        """Pure policy: κ for a given queue depth — one doubling per
+        doubling of depth past ``deepen_water``, so the set of compiled wave
+        shapes stays logarithmic in the overload."""
+        kappa, thresh = self.base_kappa, self.config.deepen_water
+        while depth >= thresh and kappa * 2 <= self.config.kappa_max:
+            kappa *= 2
+            thresh *= 2
+        return kappa
+
+    def tick(self, now: Optional[float] = None) -> int:
+        """One control cycle: read the depth, update the three knobs, record
+        the gauges.  Called by the pump every cycle and by ``admit`` on every
+        arrival (depth moves fastest exactly when decisions matter most).
+        Returns the depth it acted on."""
+        svc, cfg = self.service, self.config
+        depth = svc.queue_depth()
+        svc.telemetry.record_queue_depth(depth, svc.oldest_wait_s(now))
+
+        kappa = self.target_kappa(depth)
+        if kappa != svc.kappa:
+            svc.set_kappa(kappa)       # counts deepen/relax in telemetry
+
+        if not self.degrading and depth > cfg.degrade_water:
+            self.degrading = True
+            svc.degrade_quality(cfg.degraded_target)
+        elif self.degrading and depth <= cfg.degrade_low_water:
+            self.degrading = False
+            svc.restore_quality()
+
+        if not self.shedding and depth > cfg.high_water:
+            self.shedding = True
+            svc.telemetry.record_shed_transition(engaged=True)
+        elif self.shedding and depth <= cfg.low_water:
+            self.shedding = False
+            svc.telemetry.record_shed_transition(engaged=False)
+        return depth
+
+    def admit(self, now: Optional[float] = None) -> Optional[float]:
+        """Per-arrival decision: ``None`` admits; a float sheds, carrying the
+        ``Retry-After`` hint in seconds."""
+        self.tick(now)
+        if self.shedding:
+            self.shed += 1
+            self.service.telemetry.record_shed()
+            return self.config.retry_after_s
+        self.admitted += 1
+        return None
+
+    def stats(self) -> Dict[str, float]:
+        return {
+            "admitted": self.admitted,
+            "shed": self.shed,
+            "shedding": self.shedding,
+            "degrading": self.degrading,
+            "kappa": self.service.kappa,
+            "base_kappa": self.base_kappa,
+        }

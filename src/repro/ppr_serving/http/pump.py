@@ -1,0 +1,77 @@
+"""The event-loop pump — what actually drives the futures API on deadline.
+
+`PPRFuture` + ``poll()``/``flush()`` were designed to be driven by an event
+loop; this is that loop's heartbeat.  A single asyncio task alternates
+
+    admission.tick()  →  service.poll()  →  sleep(interval)
+
+so deadline-expired partial waves launch within one interval of their
+admission budget, full waves launch on the next cycle, and the admission
+controller's shed/degrade/deepen state tracks the queue even when no
+requests are arriving (recovery transitions happen *here*, as the queue
+drains, not on the next arrival).
+
+Wave compute is synchronous JAX and runs inside the tick, blocking the loop
+for the wave's duration — the single-process cost of a no-new-runtime-deps
+tier.  Arrivals buffer in the kernel meanwhile and flood the admission
+controller when the loop resumes, which is exactly the depth spike the
+controller exists to meter.  A process-pool engine offload is the natural
+next step and slots in behind ``service.poll`` without touching this loop.
+"""
+from __future__ import annotations
+
+import asyncio
+from typing import Optional
+
+__all__ = ["WavePump"]
+
+
+class WavePump:
+    """Owns the poll/tick task; start() is idempotent, stop() flushes."""
+
+    def __init__(self, service, admission=None, interval_s: float = 0.005):
+        if interval_s <= 0:
+            raise ValueError(f"interval_s must be > 0, got {interval_s}")
+        self.service = service
+        self.admission = admission
+        self.interval_s = interval_s
+        self.cycles = 0
+        self.waves_launched = 0
+        self._task: Optional[asyncio.Task] = None
+
+    # ------------------------------------------------------------------
+    def start(self) -> None:
+        if self._task is not None and not self._task.done():
+            return
+        self._task = asyncio.get_running_loop().create_task(
+            self._run(), name="ppr-wave-pump")
+
+    async def stop(self) -> None:
+        """Cancel the heartbeat, then flush: every admitted future resolves
+        (shutdown must not leak pending futures — in-flight HTTP handlers
+        are awaiting them)."""
+        if self._task is not None:
+            self._task.cancel()
+            try:
+                await self._task
+            except asyncio.CancelledError:
+                pass
+            self._task = None
+        self.waves_launched += self.service.flush()
+        if self.admission is not None:
+            self.admission.tick()      # record the drained queue / recovery
+
+    async def _run(self) -> None:
+        while True:
+            self.cycles += 1
+            if self.admission is not None:
+                self.admission.tick()
+            launched = self.service.poll()
+            self.waves_launched += launched
+            # a launch may have unblocked more ready waves (κ changed, or a
+            # deadline expired mid-wave) — loop immediately while productive,
+            # yielding to the loop so handlers can run between waves
+            if launched:
+                await asyncio.sleep(0)
+            else:
+                await asyncio.sleep(self.interval_s)

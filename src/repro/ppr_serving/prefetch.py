@@ -47,12 +47,18 @@ class PrefetchConfig:
                      count is scaled by ``0.5 ** (elapsed / half_life_s)`` —
                      a vertex hot an hour ago no longer ranks hot forever.
                      None (the default) keeps the legacy cumulative counts.
+    ``suppress_depth`` admission-queue depth at which an otherwise-idle poll
+                     skips prefetch entirely: pending live queries mean the
+                     service is between waves, not idle, and synthetic warm-up
+                     compute must yield.  None (the default) uses the
+                     service's κ — a full wave's worth queued is traffic.
     """
     top_n: int = 16
     k: int = 10
     max_per_pump: int = 8
     min_count: int = 2
     half_life_s: Optional[float] = None
+    suppress_depth: Optional[int] = None
 
     def __post_init__(self):
         if self.top_n < 1 or self.k < 1 or self.max_per_pump < 1:
@@ -62,6 +68,9 @@ class PrefetchConfig:
         if self.half_life_s is not None and not self.half_life_s > 0:
             raise ValueError(f"half_life_s must be > 0 (or None), "
                              f"got {self.half_life_s}")
+        if self.suppress_depth is not None and self.suppress_depth < 1:
+            raise ValueError(f"suppress_depth must be >= 1 (or None), "
+                             f"got {self.suppress_depth}")
 
 
 class Prefetcher:
@@ -80,6 +89,7 @@ class Prefetcher:
         self._start = time_fn()
         self.issued = 0
         self.rewarms_queued = 0
+        self.suppressed = 0            # idle polls skipped: live queue was deep
 
     def decay_demand(self, graph: str, counts: MutableMapping[int, float],
                      now: Optional[float] = None,
@@ -154,6 +164,7 @@ class Prefetcher:
     def stats(self) -> Dict[str, float]:
         return {
             "issued": self.issued,
+            "suppressed": self.suppressed,
             "rewarms_queued": self.rewarms_queued,
             "rewarms_pending": sum(len(q) for q in self._rewarm.values()),
         }

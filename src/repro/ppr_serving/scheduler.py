@@ -51,6 +51,7 @@ class WaveScheduler:
         self.max_wait = max_wait
         self.time_fn = time_fn
         self._queues: "OrderedDict[Hashable, List[_Pending]]" = OrderedDict()
+        self._depth = 0                # maintained by every mutation below
 
     # ------------------------------------------------------------------
     def submit(self, key: Hashable, item: Any,
@@ -58,9 +59,30 @@ class WaveScheduler:
                now: Optional[float] = None) -> None:
         now = self.time_fn() if now is None else now
         self._queues.setdefault(key, []).append(_Pending(item, now, deadline))
+        self._depth += 1
 
     def pending(self) -> int:
         return sum(len(q) for q in self._queues.values())
+
+    def queue_depth(self) -> int:
+        """Total pending queries across every wave key — O(1).
+
+        The admission controller reads this on *every* arrival (shed/admit is
+        a per-request decision), so it must not walk the pending dicts the way
+        ``pending()`` does."""
+        return self._depth
+
+    def oldest_wait_s(self, now: Optional[float] = None) -> float:
+        """Seconds the longest-waiting pending query has been queued (0.0
+        when nothing is pending).  O(active wave keys): each key's queue is
+        FIFO in enqueue time, so only the heads need comparing — and live
+        services hold a handful of (graph, precision, mesh, epoch) streams,
+        not one per query."""
+        if not self._queues:
+            return 0.0
+        now = self.time_fn() if now is None else now
+        oldest = min(q[0].enqueued_at for q in self._queues.values() if q)
+        return max(0.0, now - oldest)
 
     def purge(self, key_predicate, item_predicate=None) -> int:
         """Drop pending queries whose wave key satisfies ``key_predicate``;
@@ -83,6 +105,7 @@ class WaveScheduler:
                 self._queues[key] = kept
             else:
                 del self._queues[key]
+        self._depth -= dropped
         return dropped
 
     def extract(self, key_predicate) -> List[tuple]:
@@ -96,6 +119,7 @@ class WaveScheduler:
         for key in [k for k in self._queues if key_predicate(k)]:
             for p in self._queues.pop(key):
                 out.append((key, p.item, p.enqueued_at, p.deadline))
+        self._depth -= len(out)
         return out
 
     def flush_keys(self, keys) -> List[Wave]:
@@ -106,6 +130,7 @@ class WaveScheduler:
         waves: List[Wave] = []
         for key in [k for k in self._queues if k in keys]:
             q = self._queues.pop(key)
+            self._depth -= len(q)
             for i in range(0, len(q), self.kappa):
                 chunk = q[i: i + self.kappa]
                 waves.append(Wave(key, [p.item for p in chunk],
@@ -126,8 +151,10 @@ class WaveScheduler:
             while len(q) >= self.kappa:
                 waves.append(Wave(key, [p.item for p in q[: self.kappa]], full=True))
                 del q[: self.kappa]
+                self._depth -= self.kappa
             if q and now >= min(p.flush_at(self.max_wait) for p in q):
                 waves.append(Wave(key, [p.item for p in q], full=False))
+                self._depth -= len(q)
                 q.clear()
             if not q:
                 del self._queues[key]

@@ -235,7 +235,7 @@ class PPRService:
                     f"graph {name!r} was re-registered: the pending query for "
                     f"vertex {fut.query.vertex} was validated against the old "
                     f"topology and cannot be served — resubmit it against the "
-                    f"new graph"))
+                    f"new graph", code="graph-replaced"))
             self.controller.forget_graph(name)
             if self._warm is not None:
                 self._warm.drop_graph(name)
@@ -326,7 +326,7 @@ class PPRService:
                     f"{name!r} was invalidated by an edge delta (epoch "
                     f"{epoch}): its personalization vertex is inside the "
                     f"delta's affected frontier — resubmit to recompute on "
-                    f"the new topology"))
+                    f"the new topology", code="delta-invalidated"))
             else:
                 new_key = (key[0], key[1], key[2], epoch)
                 fut._wave_key = new_key
@@ -358,9 +358,63 @@ class PPRService:
         }
 
     # ------------------------------------------------------------------
+    # load-control hooks (driven by repro.ppr_serving.http's admission
+    # controller, but meaningful to any external control loop)
+    # ------------------------------------------------------------------
+    def queue_depth(self) -> int:
+        """Pending queries across every wave key — O(1); the admission
+        controller's shed/degrade/deepen signal."""
+        return self.scheduler.queue_depth()
+
+    def oldest_wait_s(self, now: Optional[float] = None) -> float:
+        """Seconds the longest-waiting pending query has been queued."""
+        return self.scheduler.oldest_wait_s(now)
+
+    def set_kappa(self, kappa: int) -> None:
+        """Retune the wave batch depth in place (backpressure-aware batching:
+        deepen κ under load to amortize one edge-stream pass over more
+        queries *before* resorting to shedding; relax it as the queue
+        drains).  Applies to waves formed after the call — already-queued
+        queries launch at the new depth.  Each distinct κ compiles its own
+        wave shapes, so callers should move in doublings of the base κ."""
+        if kappa < 1:
+            raise ValueError(f"kappa must be >= 1, got {kappa}")
+        if kappa == self.kappa:
+            return
+        self.telemetry.record_kappa_change(deepened=kappa > self.kappa)
+        self.kappa = kappa
+        self.scheduler.kappa = kappa
+
+    def degrade_quality(self, target: float) -> None:
+        """Impose the SLO-degradation ceiling: until ``restore_quality``,
+        every ``precision="auto"`` query resolves against
+        ``min(its target, target)`` — serving 0.93 instead of 0.95 when the
+        admission queue is deep buys wave latency at a measured, recorded
+        quality cost (each capped resolution counts in telemetry)."""
+        if self.controller.target_ceiling == float(target):
+            return
+        self.controller.set_target_ceiling(target)
+        self.telemetry.record_slo_transition(degraded=True)
+
+    def restore_quality(self) -> None:
+        """Lift the degradation ceiling (queue drained) — auto traffic
+        resumes its requested quality targets."""
+        if self.controller.target_ceiling is None:
+            return
+        self.controller.set_target_ceiling(None)
+        self.telemetry.record_slo_transition(degraded=False)
+
+    # ------------------------------------------------------------------
     def _resolve_precision(self, q: PPRQuery) -> str:
         """Concrete precision key for a query; "auto" goes through the ladder."""
         if q.precision == AUTO_KEY:
+            ceiling = self.controller.target_ceiling
+            if ceiling is not None:
+                requested = (self.controller.config.default_target
+                             if q.quality_target is None
+                             else float(q.quality_target))
+                if ceiling < requested:
+                    self.telemetry.record_degraded_query()
             fmt = self.controller.resolve(q.graph, q.quality_target)
             pkey = FLOAT_KEY if fmt is None else fmt.name
             self.telemetry.record_auto_resolution(pkey)
@@ -473,9 +527,20 @@ class PPRService:
             recs.extend(self._run_wave(wave))
             waves += 1
         if not waves and allow_prefetch and self.prefetcher is not None:
-            pw, pr = self._prefetch_pump(now)
-            waves += pw
-            recs.extend(pr)
+            # "idle" must mean idle: a deep queue with nothing launchable yet
+            # (partial waves still inside their admission budgets) is live
+            # traffic between waves, and synthetic warm-up compute would add
+            # latency right where the admission controller is fighting it
+            cfg = self.prefetcher.config
+            suppress_at = (cfg.suppress_depth if cfg.suppress_depth is not None
+                           else self.kappa)
+            if self.scheduler.queue_depth() >= suppress_at:
+                self.prefetcher.suppressed += 1
+                self.telemetry.record_prefetch_suppressed()
+            else:
+                pw, pr = self._prefetch_pump(now)
+                waves += pw
+                recs.extend(pr)
         return waves, recs
 
     # ------------------------------------------------------------------

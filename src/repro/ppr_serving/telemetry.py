@@ -62,6 +62,22 @@ class ServiceTelemetry:
         self.warm_start_iterations_saved = 0
         # async prefetcher
         self.prefetch_issued = 0
+        self.prefetch_suppressed = 0   # idle polls that skipped prefetch: queue deep
+        # HTTP serving control plane (repro.ppr_serving.http): admission
+        # queue gauges plus every shed / degrade / batching decision — the
+        # issue of record for "was quality traded, and did it recover"
+        self.queue_depth_last = 0
+        self.queue_depth_peak = 0
+        self.oldest_wait_last_s = 0.0
+        self.oldest_wait_peak_s = 0.0
+        self.queries_shed = 0          # rejected by admission (HTTP 429)
+        self.shed_engaged_events = 0   # high-water crossings (entering shed)
+        self.shed_recovered_events = 0 # low-water crossings (leaving shed)
+        self.slo_degrade_events = 0    # quality-target ceiling imposed
+        self.slo_recover_events = 0    # ceiling lifted (queue drained)
+        self.slo_degraded_queries = 0  # auto queries resolved under a ceiling
+        self.kappa_deepen_events = 0   # wave batch deepened under backpressure
+        self.kappa_relax_events = 0    # batch depth restored toward base κ
         # per-(graph, vertex) demand — what the prefetcher ranks hotness by —
         # plus each vertex's most recent (k, resolved precision), so a
         # prefetched entry lands under the cache key real traffic actually
@@ -159,6 +175,53 @@ class ServiceTelemetry:
         """Synthetic cache-warming queries issued during an idle pump."""
         self.prefetch_issued += int(issued)
 
+    def record_prefetch_suppressed(self) -> None:
+        """An idle poll skipped prefetch because the wave queue was deep —
+        idle-only warming yielding to live traffic."""
+        self.prefetch_suppressed += 1
+
+    # -- HTTP serving control plane ------------------------------------
+    def record_queue_depth(self, depth: int, oldest_wait_s: float) -> None:
+        """Admission-queue gauges (last + peak): sampled by the serving
+        pump's control ticks, surfaced by ``/v1/stats``."""
+        self.queue_depth_last = int(depth)
+        self.queue_depth_peak = max(self.queue_depth_peak, int(depth))
+        self.oldest_wait_last_s = float(oldest_wait_s)
+        self.oldest_wait_peak_s = max(self.oldest_wait_peak_s,
+                                      float(oldest_wait_s))
+
+    def record_shed(self) -> None:
+        """One arriving query rejected by admission control (HTTP 429)."""
+        self.queries_shed += 1
+
+    def record_shed_transition(self, engaged: bool) -> None:
+        """Load shedding switched on (high-water crossed) or off (drained
+        below the low-water mark)."""
+        if engaged:
+            self.shed_engaged_events += 1
+        else:
+            self.shed_recovered_events += 1
+
+    def record_slo_transition(self, degraded: bool) -> None:
+        """The SLO controller imposed (or lifted) the degraded quality-target
+        ceiling on ``precision="auto"`` resolution."""
+        if degraded:
+            self.slo_degrade_events += 1
+        else:
+            self.slo_recover_events += 1
+
+    def record_degraded_query(self) -> None:
+        """One auto query resolved against a stepped-down quality target."""
+        self.slo_degraded_queries += 1
+
+    def record_kappa_change(self, deepened: bool) -> None:
+        """Backpressure batching moved the wave depth: deepened under load,
+        or relaxed back toward the base κ as the queue drained."""
+        if deepened:
+            self.kappa_deepen_events += 1
+        else:
+            self.kappa_relax_events += 1
+
     # ------------------------------------------------------------------
     @property
     def waves(self) -> int:
@@ -197,6 +260,19 @@ class ServiceTelemetry:
             "warm_start_columns": self.warm_start_columns,
             "warm_start_iterations_saved": self.warm_start_iterations_saved,
             "prefetch_issued": self.prefetch_issued,
+            "prefetch_suppressed": self.prefetch_suppressed,
+            "queue_depth": self.queue_depth_last,
+            "queue_depth_peak": self.queue_depth_peak,
+            "oldest_wait_s": self.oldest_wait_last_s,
+            "oldest_wait_peak_s": self.oldest_wait_peak_s,
+            "queries_shed": self.queries_shed,
+            "shed_engaged_events": self.shed_engaged_events,
+            "shed_recovered_events": self.shed_recovered_events,
+            "slo_degrade_events": self.slo_degrade_events,
+            "slo_recover_events": self.slo_recover_events,
+            "slo_degraded_queries": self.slo_degraded_queries,
+            "kappa_deepen_events": self.kappa_deepen_events,
+            "kappa_relax_events": self.kappa_relax_events,
         }
         for pkey, n in sorted(self.served_by_precision.items()):
             out[f"served_{pkey}"] = n

@@ -1,0 +1,522 @@
+"""HTTP serving tier: admission hysteresis (no flapping), load shedding,
+SLO-aware quality degradation + recovery, rejection-path status mapping
+(QueryRejected -> 409/410, never 500, no leaked futures), queue-depth
+accessors, prefetch suppression under live traffic, wire schemas, and an
+end-to-end asyncio server run whose admitted results match run_batch()."""
+import asyncio
+import json
+
+import numpy as np
+import pytest
+
+from repro.graphs import holme_kim_powerlaw
+from repro.graph_updates import localized_delta
+from repro.ppr_serving import (
+    AdmissionConfig,
+    AdmissionController,
+    PPRHTTPServer,
+    PPRQuery,
+    PPRService,
+    QueryRejected,
+    ServiceTelemetry,
+    ServingApp,
+    WaveScheduler,
+)
+from repro.ppr_serving.http import (
+    HTTPRequest,
+    PPRRequestSchema,
+    SchemaError,
+    http_request,
+)
+
+
+@pytest.fixture(scope="module")
+def graph():
+    return holme_kim_powerlaw(400, m=4, seed=2)
+
+
+class FakeClock:
+    def __init__(self):
+        self.t = 0.0
+
+    def __call__(self):
+        return self.t
+
+
+# ---------------------------------------------------------------------------
+# scheduler queue-depth accessors (satellite)
+# ---------------------------------------------------------------------------
+def test_scheduler_queue_depth_tracks_every_mutation():
+    clk = FakeClock()
+    sched = WaveScheduler(kappa=2, max_wait=100.0, time_fn=clk)
+    assert sched.queue_depth() == 0
+    for i in range(5):
+        sched.submit(("g", "f32"), i)
+    sched.submit(("g", 26), 99)
+    assert sched.queue_depth() == 6
+    # full waves pop kappa-sized chunks; the leftover partial stays queued
+    waves = sched.ready_waves()
+    assert sum(len(w.items) for w in waves) == 4
+    assert sched.queue_depth() == 2
+    # purge drops one key's pending
+    assert sched.purge(lambda k: k == ("g", 26)) == 1
+    assert sched.queue_depth() == 1
+    # extract pops the rest
+    assert len(sched.extract(lambda k: True)) == 1
+    assert sched.queue_depth() == 0
+
+
+def test_scheduler_flush_keys_decrements_depth():
+    sched = WaveScheduler(kappa=4, max_wait=100.0, time_fn=FakeClock())
+    for i in range(3):
+        sched.submit(("g", "f32"), i)
+    waves = sched.flush_keys([("g", "f32")])
+    assert sum(len(w.items) for w in waves) == 3
+    assert sched.queue_depth() == 0
+
+
+def test_scheduler_oldest_wait_tracks_queue_head():
+    clk = FakeClock()
+    sched = WaveScheduler(kappa=8, max_wait=100.0, time_fn=clk)
+    assert sched.oldest_wait_s() == 0.0
+    sched.submit(("g", "f32"), 1)
+    clk.t = 2.0
+    sched.submit(("g", 26), 2)            # younger key must not win
+    assert sched.oldest_wait_s() == pytest.approx(2.0)
+    assert sched.oldest_wait_s(now=5.0) == pytest.approx(5.0)
+    sched.flush_keys([("g", "f32")])
+    assert sched.oldest_wait_s() == pytest.approx(0.0)  # head is now t=2.0
+
+
+def test_service_exposes_depth_and_wait(graph):
+    clk = FakeClock()
+    svc = PPRService(kappa=8, iterations=3, max_wait=100.0, time_fn=clk)
+    svc.register_graph("g", graph)
+    for v in (3, 9, 11):
+        svc.submit(PPRQuery("g", v, k=5))
+    clk.t = 1.5
+    assert svc.queue_depth() == 3
+    assert svc.oldest_wait_s() == pytest.approx(1.5)
+    svc.flush()
+    assert svc.queue_depth() == 0
+    t = svc.telemetry_summary()
+    assert t["queue_depth_peak"] >= 0     # gauges exist even if never recorded
+
+
+def test_telemetry_queue_gauges_last_and_peak():
+    t = ServiceTelemetry()
+    t.record_queue_depth(5, 0.2)
+    t.record_queue_depth(2, 0.1)
+    s = t.summary()
+    assert s["queue_depth"] == 2 and s["queue_depth_peak"] == 5
+    assert s["oldest_wait_s"] == pytest.approx(0.1)
+    assert s["oldest_wait_peak_s"] == pytest.approx(0.2)
+
+
+# ---------------------------------------------------------------------------
+# admission controller: pure policy + hysteresis (no sockets, no jax)
+# ---------------------------------------------------------------------------
+class StubService:
+    """The controller's whole service contract, with a dialable depth."""
+
+    def __init__(self, kappa=4):
+        self.kappa = kappa
+        self.telemetry = ServiceTelemetry()
+        self.depth = 0
+        self.quality_log = []
+
+    def queue_depth(self):
+        return self.depth
+
+    def oldest_wait_s(self, now=None):
+        return 0.0
+
+    def set_kappa(self, kappa):
+        self.telemetry.record_kappa_change(deepened=kappa > self.kappa)
+        self.kappa = kappa
+
+    def degrade_quality(self, target):
+        self.quality_log.append(("degrade", target))
+
+    def restore_quality(self):
+        self.quality_log.append(("restore", None))
+
+
+def _cfg(**kw):
+    base = dict(high_water=8, low_water=2, deepen_water=4, kappa_max=16,
+                degrade_water=6, degrade_low_water=2, degraded_target=0.9)
+    base.update(kw)
+    return AdmissionConfig(**base)
+
+
+def test_target_kappa_doubles_per_depth_doubling():
+    ctl = AdmissionController(StubService(kappa=4), _cfg())
+    assert [ctl.target_kappa(d) for d in (0, 3, 4, 7, 8, 100)] == \
+        [4, 4, 8, 8, 16, 16]
+
+
+def test_kappa_max_below_base_kappa_is_an_error():
+    with pytest.raises(ValueError, match="kappa_max"):
+        AdmissionController(StubService(kappa=32), _cfg(kappa_max=16))
+
+
+@pytest.mark.parametrize("kw", [
+    dict(low_water=0), dict(low_water=9),            # low > high
+    dict(degrade_low_water=7),                        # > degrade_water
+    dict(deepen_water=0), dict(kappa_max=0),
+    dict(degraded_target=0.0), dict(degraded_target=1.5),
+    dict(retry_after_s=0.0),
+])
+def test_admission_config_validation(kw):
+    with pytest.raises(ValueError):
+        _cfg(**kw)
+
+
+def test_shed_hysteresis_does_not_flap():
+    svc = StubService(kappa=4)
+    ctl = AdmissionController(svc, _cfg())
+    svc.depth = 8                         # == high_water: not yet shedding
+    ctl.tick()
+    assert not ctl.shedding
+    svc.depth = 9                         # > high_water: engage
+    ctl.tick()
+    assert ctl.shedding
+    # oscillating inside the (low_water, high_water] band must not flap
+    for depth in (3, 8, 5, 8, 3, 7):
+        svc.depth = depth
+        ctl.tick()
+        assert ctl.shedding
+    s = svc.telemetry.summary()
+    assert s["shed_engaged_events"] == 1 and s["shed_recovered_events"] == 0
+    svc.depth = 2                         # <= low_water: recover
+    ctl.tick()
+    assert not ctl.shedding
+    assert svc.telemetry.summary()["shed_recovered_events"] == 1
+
+
+def test_degrade_hysteresis_and_quality_calls():
+    svc = StubService(kappa=4)
+    ctl = AdmissionController(svc, _cfg())
+    svc.depth = 7                         # > degrade_water
+    ctl.tick()
+    assert ctl.degrading and svc.quality_log == [("degrade", 0.9)]
+    for depth in (3, 6, 4, 7):            # inside the hysteresis band
+        svc.depth = depth
+        ctl.tick()
+    assert svc.quality_log == [("degrade", 0.9)]      # exactly one call
+    svc.depth = 2                         # <= degrade_low_water
+    ctl.tick()
+    assert not ctl.degrading
+    assert svc.quality_log[-1] == ("restore", None)
+
+
+def test_admit_counts_and_returns_retry_after():
+    svc = StubService(kappa=4)
+    ctl = AdmissionController(svc, _cfg(retry_after_s=0.25))
+    assert ctl.admit() is None
+    svc.depth = 9
+    assert ctl.admit() == pytest.approx(0.25)
+    assert (ctl.admitted, ctl.shed) == (1, 1)
+    assert svc.telemetry.summary()["queries_shed"] == 1
+    assert ctl.stats()["shedding"] is True
+
+
+def test_tick_deepens_and_relaxes_kappa_through_service_hook():
+    svc = StubService(kappa=4)
+    ctl = AdmissionController(svc, _cfg())
+    svc.depth = 8
+    ctl.tick()
+    assert svc.kappa == 16
+    svc.depth = 0
+    ctl.tick()
+    assert svc.kappa == 4                 # back to base
+    s = svc.telemetry.summary()
+    assert s["kappa_deepen_events"] == 1 and s["kappa_relax_events"] == 1
+
+
+# ---------------------------------------------------------------------------
+# service-side load-control hooks
+# ---------------------------------------------------------------------------
+def test_degrade_quality_caps_auto_resolution_and_recovers(graph):
+    svc = PPRService(kappa=2, iterations=3)
+    svc.register_graph("g", graph, formats=[26])
+    svc.degrade_quality(0.9)
+    assert svc.controller.target_ceiling == pytest.approx(0.9)
+    rec = svc.run_batch([PPRQuery("g", 7, k=5, precision="auto",
+                                  quality_target=0.95)])[0]
+    assert rec is not None
+    t = svc.telemetry_summary()
+    assert t["slo_degrade_events"] == 1
+    assert t["slo_degraded_queries"] == 1  # requested .95, served under .9
+    svc.restore_quality()
+    assert svc.controller.target_ceiling is None
+    assert svc.telemetry_summary()["slo_recover_events"] == 1
+    # both are idempotent no-ops when already in that state
+    svc.restore_quality()
+    svc.degrade_quality(0.9)
+    svc.degrade_quality(0.9)
+    assert svc.telemetry_summary()["slo_degrade_events"] == 2
+
+
+def test_set_kappa_applies_to_scheduler_and_validates(graph):
+    svc = PPRService(kappa=4, iterations=3)
+    svc.register_graph("g", graph)
+    svc.set_kappa(8)
+    assert svc.kappa == 8 and svc.scheduler.kappa == 8
+    with pytest.raises(ValueError):
+        svc.set_kappa(0)
+
+
+def test_prefetch_yields_to_live_traffic(graph):
+    """Satellite: an idle poll with pending live queries past the suppress
+    depth skips prefetch and counts the suppression."""
+    from repro.ppr_serving import PrefetchConfig
+    clk = FakeClock()
+    svc = PPRService(kappa=8, iterations=3, max_wait=100.0, time_fn=clk,
+                     prefetch=PrefetchConfig(suppress_depth=2))
+    svc.register_graph("g", graph)
+    for v in (3, 9, 11):                  # partial wave, deadline far away
+        svc.submit(PPRQuery("g", v, k=5))
+    assert svc.poll() == 0                # idle poll, but 3 >= suppress_depth
+    assert svc.prefetcher.suppressed == 1
+    t = svc.telemetry_summary()
+    assert t["prefetch_suppressed"] == 1 and t["prefetch_issued"] == 0
+    svc.flush()
+    svc.poll()                            # drained: prefetch eligible again
+    assert svc.prefetcher.suppressed == 1
+
+
+def test_prefetch_default_suppress_depth_is_kappa(graph):
+    """Depth below κ is idle-enough: the PR-4/5 prefetch behaviour (fire
+    while a lone query waits) must survive the new gate."""
+    svc = PPRService(kappa=4, iterations=3, max_wait=100.0,
+                     time_fn=FakeClock(), prefetch=True)
+    svc.register_graph("g", graph)
+    svc.submit(PPRQuery("g", 3, k=5))
+    svc.poll()
+    assert svc.prefetcher.suppressed == 0
+
+
+# ---------------------------------------------------------------------------
+# QueryRejected codes (satellite: machine-readable rejection classes)
+# ---------------------------------------------------------------------------
+def test_query_rejected_codes(graph):
+    assert QueryRejected("x").code == "rejected"
+    svc = PPRService(kappa=8, iterations=3, max_wait=100.0,
+                     time_fn=FakeClock())
+    svc.register_graph("g", graph)
+    fut = svc.submit(PPRQuery("g", 3, k=5))
+    svc.register_graph("g", graph)        # re-registration purges pending
+    with pytest.raises(QueryRejected) as ei:
+        fut.result()
+    assert ei.value.code == "graph-replaced"
+
+
+def test_delta_invalidation_code(graph):
+    svc = PPRService(kappa=8, iterations=3, max_wait=100.0,
+                     time_fn=FakeClock())
+    svc.register_graph("g", graph)
+    d = localized_delta(graph, np.random.default_rng(3), n_add=2, n_remove=1)
+    frontier = sorted(int(v) for v in d.affected_frontier(graph))
+    fut = svc.submit(PPRQuery("g", frontier[0], k=5))
+    svc.apply_delta("g", d)
+    with pytest.raises(QueryRejected) as ei:
+        fut.result()
+    assert ei.value.code == "delta-invalidated"
+
+
+# ---------------------------------------------------------------------------
+# wire schemas
+# ---------------------------------------------------------------------------
+def test_schema_parse_happy_path():
+    spec = PPRRequestSchema.parse(json.dumps(
+        {"graph": "g", "vertex": 3, "k": 5, "precision": "auto",
+         "quality_target": 0.95, "deadline_s": 0.05}).encode())
+    assert (spec.graph, spec.vertex, spec.k) == ("g", 3, 5)
+    assert spec.precision == "auto"
+    assert spec.quality_target == pytest.approx(0.95)
+
+
+@pytest.mark.parametrize("body", [
+    b"",                                       # empty
+    b"not json",                               # invalid JSON
+    b"[1,2]",                                  # not an object
+    b'{"vertex": 3}',                          # missing graph
+    b'{"graph": "g"}',                         # missing vertex
+    b'{"graph": "g", "vertex": true}',         # bool is not an int
+    b'{"graph": "g", "vertex": 3, "k": "x"}',  # wrong type
+    b'{"graph": "g", "vertex": 3, "bogus": 1}',  # unknown field
+])
+def test_schema_parse_rejects(body):
+    with pytest.raises(SchemaError):
+        PPRRequestSchema.parse(body)
+
+
+def test_app_routes_without_sockets(graph):
+    svc = PPRService(kappa=2, iterations=3)
+    svc.register_graph("g", graph)
+    app = ServingApp(svc)
+
+    def call(method, path, body=b""):
+        return asyncio.run(app.handle(
+            HTTPRequest(method=method, path=path, headers={}, body=body)))
+
+    assert call("GET", "/v1/nope").status == 404
+    assert call("DELETE", "/v1/ppr").status == 405
+    assert call("POST", "/v1/ppr", b"{").status == 400
+    r = call("POST", "/v1/ppr",
+             b'{"graph": "missing", "vertex": 1}')
+    assert r.status == 404 and r.payload["code"] == "unknown-graph"
+    r = call("POST", "/v1/ppr",
+             b'{"graph": "g", "vertex": 1, "k": 0}')   # submit's validation
+    assert r.status == 400
+    h = call("GET", "/v1/healthz")
+    assert h.status == 200 and h.payload["graphs"] == ["g"]
+
+
+# ---------------------------------------------------------------------------
+# end-to-end over real sockets
+# ---------------------------------------------------------------------------
+async def _drain(host, port, timeout_s=30.0):
+    loop = asyncio.get_running_loop()
+    t0 = loop.time()
+    while loop.time() - t0 < timeout_s:
+        _, _, h = await http_request(host, port, "GET", "/v1/healthz")
+        if h["queue_depth"] == 0 and not h["shedding"] and not h["degrading"]:
+            return True
+        await asyncio.sleep(0.02)
+    return False
+
+
+def test_e2e_shed_degrade_recover_and_run_batch_parity(graph):
+    """The acceptance e2e: one real asyncio server driven through
+    submit -> degrade -> shed -> recover, with admitted explicit-precision
+    results identical to run_batch() on an untouched mirror service."""
+    svc = PPRService(kappa=4, iterations=6, max_wait=0.002)
+    svc.register_graph("g", graph, formats=[26])
+    svc.run_batch([PPRQuery("g", v, k=5, precision="auto")
+                   for v in range(4)])    # warm jit outside the burst
+    svc.telemetry.reset()
+    server = PPRHTTPServer(svc, admission=AdmissionConfig(
+        high_water=20, low_water=2, deepen_water=8, kappa_max=8,
+        degrade_water=3, degrade_low_water=1, degraded_target=0.9))
+
+    async def flood(host, port, vertices, expect_admitted):
+        """Fire a concurrent burst with the pump *paused*, so every arrival
+        hits admission before any wave drains — the depth sequence (and so
+        every shed/degrade decision) is exact, not a race against the pump.
+        Returns the gather task once the queue holds the admitted set."""
+        task = asyncio.gather(*[
+            http_request(host, port, "POST", "/v1/ppr",
+                         {"graph": "g", "vertex": int(v), "k": 5,
+                          "precision": "auto", "quality_target": 0.95})
+            for v in vertices])
+        deadline = asyncio.get_running_loop().time() + 10.0
+        while svc.queue_depth() < expect_admitted:
+            assert asyncio.get_running_loop().time() < deadline, \
+                f"queue never reached {expect_admitted}"
+            await asyncio.sleep(0.002)
+        server.pump.start()               # now let the waves drain it
+        return await task
+
+    async def scenario():
+        await server.transport.start()    # transport up, pump held back
+        host, port = server.host, server.port
+
+        # --- phase A: burst of 10 > degrade_water but < high_water ---------
+        # admission sees depths 0..9: degrade engages at depth 4 (the 5th
+        # arrival), nothing sheds — so exactly 6 responses carry the flag
+        rs = await flood(host, port, range(20, 30), expect_admitted=10)
+        assert [r[0] for r in rs] == [200] * 10
+        assert sum(r[2]["degraded"] for r in rs) == 6
+        assert await _drain(host, port)   # queue empties -> quality restored
+        _, _, stats = await http_request(host, port, "GET", "/v1/stats")
+        assert stats["slo_degrade_events"] == 1
+        assert stats["slo_recover_events"] == 1
+        assert stats["slo_degraded_queries"] >= 6
+        assert stats["queries_shed"] == 0
+        await server.pump.stop()          # queue is empty: flush is a no-op
+
+        # --- phase B: burst of 30 > high_water -----------------------------
+        # depths 0..20 admit (shed engages when the 22nd arrival's tick sees
+        # depth 21 > 20); the remaining 9 shed with the backoff hint
+        rs = await flood(host, port, range(40, 70), expect_admitted=21)
+        statuses = [r[0] for r in rs]
+        assert statuses.count(200) == 21 and statuses.count(429) == 9
+        shed = next(r for r in rs if r[0] == 429)
+        assert float(shed[1]["retry-after"]) > 0    # the backoff hint
+        assert shed[2]["code"] == "shed"
+        assert await _drain(host, port)
+        _, _, stats = await http_request(host, port, "GET", "/v1/stats")
+        assert stats["shed_engaged_events"] == 1
+        assert stats["shed_recovered_events"] == 1
+        assert stats["queries_shed"] == 9
+        assert stats["queue_depth_peak"] == 21
+
+        # --- phase C: admitted results == run_batch() ----------------------
+        # explicit precision: its resolution is load-independent, so the
+        # mirror comparison is exact even after the degrade/recover cycle
+        verts = [3, 9, 11, 17]
+        rs = [await http_request(host, port, "POST", "/v1/ppr",
+                                 {"graph": "g", "vertex": v, "k": 5,
+                                  "precision": 26})
+              for v in verts]
+        assert [r[0] for r in rs] == [200] * 4
+        await server.stop()
+        assert svc.queue_depth() == 0     # nothing leaked pending
+        return rs
+
+    http_recs = asyncio.run(scenario())
+
+    mirror = PPRService(kappa=4, iterations=6)
+    mirror.register_graph("g", graph, formats=[26])
+    batch = mirror.run_batch([PPRQuery("g", v, k=5, precision=26)
+                              for v in (3, 9, 11, 17)])
+    for (_, _, payload), rec in zip(http_recs, batch):
+        assert payload["precision"] == rec.precision
+        assert [r["vertex"] for r in payload["recommendations"]] == \
+            [int(v) for v in rec.vertices]
+        np.testing.assert_allclose(
+            [r["score"] for r in payload["recommendations"]],
+            np.asarray(rec.scores, dtype=float), rtol=0, atol=0)
+
+
+def test_e2e_rejection_paths_are_clean_statuses(graph):
+    """QueryRejected futures surface as 410 (graph-replaced) / 409
+    (delta-invalidated) over the wire — never 500 — and leave no pending
+    futures behind."""
+    svc = PPRService(kappa=8, iterations=3, max_wait=100.0)
+    svc.register_graph("g", graph)
+    server = PPRHTTPServer(svc, pump_interval_s=0.01)
+
+    async def scenario():
+        await server.start()
+        host, port = server.host, server.port
+
+        async def pending_request(vertex):
+            task = asyncio.create_task(http_request(
+                host, port, "POST", "/v1/ppr",
+                {"graph": "g", "vertex": vertex, "k": 5}))
+            while svc.queue_depth() == 0:     # parked in a partial wave
+                await asyncio.sleep(0.005)
+            return task
+
+        # graph replaced under a pending query -> 410
+        task = await pending_request(3)
+        svc.register_graph("g", graph)
+        status, _, payload = await task
+        assert status == 410 and payload["code"] == "graph-replaced"
+
+        # delta frontier invalidates a pending query -> 409
+        d = localized_delta(graph, np.random.default_rng(3),
+                            n_add=2, n_remove=1)
+        frontier = sorted(int(v) for v in d.affected_frontier(graph))
+        task = await pending_request(frontier[0])
+        svc.apply_delta("g", d)
+        status, _, payload = await task
+        assert status == 409 and payload["code"] == "delta-invalidated"
+
+        assert svc.queue_depth() == 0
+        await server.stop()
+
+    asyncio.run(scenario())
