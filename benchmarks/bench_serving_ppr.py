@@ -20,6 +20,7 @@ import numpy as np
 
 from repro.graphs import holme_kim_powerlaw
 from repro.ppr_serving import PPRQuery, PPRService
+from repro.ppr_serving.telemetry import WAVE_STAGES
 
 KAPPAS = (1, 4, 8, 16)
 PRECISIONS = (None, 26, 20)          # f32 reference + paper's widest/narrowest
@@ -60,6 +61,10 @@ def run(scale: float = 0.02, n_queries: int = 64, iterations: int = 10,
                 "engine_mean_s": s.get(f"engine_{engine_key}_latency_mean_s", 0.0),
                 "engine_p95_s": s.get(f"engine_{engine_key}_latency_p95_s", 0.0),
                 "occupancy": s["mean_occupancy"],
+                # per-stage wave timing (obs registry): where the wave's
+                # latency went — plan/warm_start/iterate/topk/resolve
+                **{f"stage_{stage}_mean_s": s.get(f"stage_{stage}_mean_s", 0.0)
+                   for stage in WAVE_STAGES},
             })
     return rows
 
@@ -77,7 +82,10 @@ def main(scale: float = 0.02, dry_run: bool = False):
               f";p50_us={r['p50_s']*1e6:.0f};p95_us={r['p95_s']*1e6:.0f}"
               f";occupancy={r['occupancy']:.2f}"
               f";engine={r['engine']}"
-              f";engine_p95_us={r['engine_p95_s']*1e6:.0f}")
+              f";engine_p95_us={r['engine_p95_s']*1e6:.0f}"
+              f";plan_us={r['stage_plan_mean_s']*1e6:.0f}"
+              f";iterate_us={r['stage_iterate_mean_s']*1e6:.0f}"
+              f";topk_us={r['stage_topk_mean_s']*1e6:.0f}")
     return rows
 
 

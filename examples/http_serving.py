@@ -7,11 +7,13 @@ requests with the bundled asyncio client — explicit precision, auto
 precision, a cache hit, a validation error — then pushes a burst past the
 admission high-water mark to show load shedding (429 + Retry-After) and
 SLO-aware quality degradation kicking in, and prints the /v1/stats audit
-trail of every decision.
+trail of every decision plus the flight recorder's reconstruction of the
+incident (the shed/degrade/recover timeline and one query's span tree).
 """
 import asyncio
 
 from repro.graphs import holme_kim_powerlaw
+from repro.obs import format_event, format_trace
 from repro.ppr_serving import AdmissionConfig, PPRHTTPServer, PPRService
 from repro.ppr_serving.http import AsyncHTTPClient, http_request
 
@@ -20,7 +22,7 @@ async def main():
     # 1. a graph behind a serving instance; tight water marks so the demo
     #    overloads on a laptop (production values scale with κ)
     g = holme_kim_powerlaw(1500, m=4, seed=0)
-    svc = PPRService(kappa=4, iterations=10, max_wait=0.002)
+    svc = PPRService(kappa=4, iterations=10, max_wait=0.002, tracing=True)
     svc.register_graph("social", g, formats=[26])
     server = PPRHTTPServer(svc, admission=AdmissionConfig(
         high_water=10, low_water=2, deepen_water=4, kappa_max=16,
@@ -77,6 +79,20 @@ async def main():
                 "slo_recover_events", "kappa_deepen_events",
                 "kappa_relax_events", "cache_hit_rate"):
         print(f"  {key:24s} {stats[key]}")
+
+    # 7. the flight recorder replays the incident itself: the control-plane
+    #    timeline (κ deepened → quality degraded → shedding engaged → queue
+    #    drained → recovered) and, for any one query, the spans of what it
+    #    waited on and where its wave spent the time
+    print("flight recorder — incident timeline:")
+    for ev in svc.recorder.events():
+        print("  " + format_event(ev))
+    burst_query = next(t for t in reversed(svc.recorder.traces())
+                       if t["kind"] == "query"
+                       and t["root"]["attrs"].get("source") == "wave")
+    print("flight recorder — one burst query's span tree:")
+    for line in format_trace(burst_query).splitlines():
+        print("  " + line)
 
     await server.stop()
     print("server stopped")

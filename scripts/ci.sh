@@ -12,6 +12,11 @@ export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 echo "== tier-1: pytest =="
 python -m pytest -x -q
 
+echo "== snapshot manifests (API surface + metric names) =="
+# both also ride the pytest run above; re-run standalone so a drifted
+# manifest fails loudly here with the regen command in the diff output
+python -m pytest -q tests/test_api_surface.py tests/test_metric_names.py
+
 echo "== examples smoke (ported to the futures API, deprecation-clean) =="
 # the ported examples must not touch the deprecated serve()/pump()/drain()
 # wrappers — the warning is attributed to the calling frame (stacklevel), so

@@ -56,6 +56,15 @@ def _parse_args(argv=None):
     ap.add_argument("--delta-edges", type=int, default=64,
                     help="with --replay-deltas: edge insertions per round "
                          "(half as many removals ride along)")
+    ap.add_argument("--trace", action="store_true",
+                    help="with --serve/--http/--replay-deltas: arm per-query "
+                         "span tracing (every query records its admission "
+                         "wait, cache probe, wave execution and convergence "
+                         "into the flight recorder)")
+    ap.add_argument("--dump-traces", type=int, default=0, metavar="N",
+                    help="after the run, print the flight recorder's last N "
+                         "traces as span trees plus control-plane events "
+                         "(implies --trace)")
     return ap.parse_args(argv)
 
 
@@ -137,7 +146,8 @@ def _serve(args, g, vertices, fmt, label):
                 f"up front)")
         mesh = jax.make_mesh((args.shards,), ("shard",))
     svc = PPRService(kappa=args.kappa, iterations=args.iterations,
-                     alpha=args.alpha, cache_capacity=0)      # measure compute
+                     alpha=args.alpha, cache_capacity=0,      # measure compute
+                     tracing=_tracing(args))
     svc.register_graph(args.graph, g,
                        formats=[] if fmt is None else [fmt], mesh=mesh)
     precision = None if fmt is None else fmt.name
@@ -159,6 +169,8 @@ def _serve(args, g, vertices, fmt, label):
             v = t[k]
             print(f"  {k:28s} {v:.5f}" if isinstance(v, float) else
                   f"  {k:28s} {v}")
+    if args.dump_traces:
+        _dump_recorder(svc, args.dump_traces)
     return None
 
 
@@ -173,7 +185,8 @@ def _serve_http(args, g, fmt, label):
     from repro.ppr_serving import PPRHTTPServer, PPRService
 
     svc = PPRService(kappa=args.kappa, iterations=args.iterations,
-                     alpha=args.alpha, max_wait=0.005, early_exit=True)
+                     alpha=args.alpha, max_wait=0.005, early_exit=True,
+                     tracing=_tracing(args))
     svc.register_graph(args.graph, g, formats=[] if fmt is None else [fmt])
     server = PPRHTTPServer(svc, port=args.http)
 
@@ -186,6 +199,8 @@ def _serve_http(args, g, fmt, label):
               f'"precision": "auto"}}')
         print("  GET  /v1/healthz  liveness + queue depth")
         print("  GET  /v1/stats    telemetry + admission counters")
+        print("  GET  /v1/metrics  Prometheus text exposition (?format=json)")
+        print("  GET  /v1/debug/traces  flight recorder (?n=K)")
         try:
             await asyncio.Event().wait()
         finally:
@@ -195,6 +210,8 @@ def _serve_http(args, g, fmt, label):
         asyncio.run(_run())
     except KeyboardInterrupt:
         print("\nshutting down")
+    if args.dump_traces:
+        _dump_recorder(svc, args.dump_traces)
 
 
 def _replay_deltas(args, g, fmt, label):
@@ -216,7 +233,7 @@ def _replay_deltas(args, g, fmt, label):
 
     svc = PPRService(kappa=args.kappa, iterations=args.iterations,
                      alpha=args.alpha, early_exit=True, warm_start=True,
-                     prefetch=True)
+                     prefetch=True, tracing=_tracing(args))
     svc.register_graph(args.graph, g,
                        formats=[] if fmt is None else [fmt])
     precision = None if fmt is None else fmt.name
@@ -263,6 +280,28 @@ def _replay_deltas(args, g, fmt, label):
         v = t[k]
         print(f"  {k:28s} {v:.4f}" if isinstance(v, float) else
               f"  {k:28s} {v}")
+    if args.dump_traces:
+        _dump_recorder(svc, args.dump_traces)
+
+
+def _tracing(args) -> bool:
+    return bool(args.trace or args.dump_traces)
+
+
+def _dump_recorder(svc, n):
+    """Print the flight recorder's tail: control-plane events (the incident
+    timeline), then the last ``n`` completed traces as span trees."""
+    from repro.obs import format_event, format_trace
+
+    snap = svc.recorder.snapshot(n_traces=n, n_events=n)
+    print(f"flight recorder: {snap['traces_recorded']} traces / "
+          f"{snap['events_recorded']} events recorded "
+          f"(rings {snap['trace_capacity']}/{snap['event_capacity']})")
+    for ev in snap["events"]:
+        print("  " + format_event(ev))
+    for tr in snap["traces"]:
+        for line in format_trace(tr).splitlines():
+            print("  " + line)
 
 
 if __name__ == "__main__":

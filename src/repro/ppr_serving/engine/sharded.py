@@ -127,7 +127,7 @@ class ShardedFloatEngine(WaveEngine):
 
     def plan(self, rg, fmt: Optional[QFormat] = None, *, alpha: float,
              iterations: int, convergence=None,
-             topk_tile: Optional[int] = None) -> WavePlan:
+             topk_tile: Optional[int] = None, trace_hook=None) -> WavePlan:
         self.prepare(rg)
         body = make_ppr_sharded_float_step(rg.mesh, rg.axis,
                                            rg.num_vertices, alpha)
@@ -142,7 +142,8 @@ class ShardedFloatEngine(WaveEngine):
             engine=self.key, fixed=False, scale=None,
             initial=lambda pers: personalization_matrix(num_vertices, pers),
             step=step,
-            iterate=self._make_iterate(iterations, convergence, False, None),
+            iterate=self._make_iterate(iterations, convergence, False, None,
+                                       trace_hook=trace_hook),
             topk=self._make_topk(topk_tile))
 
     def on_delta(self, rg, info) -> None:
@@ -168,7 +169,7 @@ class ShardedFixedEngine(WaveEngine):
 
     def plan(self, rg, fmt: Optional[QFormat] = None, *, alpha: float,
              iterations: int, convergence=None,
-             topk_tile: Optional[int] = None) -> WavePlan:
+             topk_tile: Optional[int] = None, trace_hook=None) -> WavePlan:
         if fmt is None:
             raise ValueError(f"{self.key!r} engine needs a concrete Q format")
         self.prepare(rg)
@@ -187,7 +188,8 @@ class ShardedFixedEngine(WaveEngine):
             initial=lambda pers: personalization_matrix_fixed(
                 num_vertices, pers, fmt),
             step=step,
-            iterate=self._make_iterate(iterations, convergence, True, fmt.scale),
+            iterate=self._make_iterate(iterations, convergence, True, fmt.scale,
+                                       trace_hook=trace_hook),
             topk=self._make_topk(topk_tile))
 
     def on_delta(self, rg, info) -> None:

@@ -49,12 +49,13 @@ class PPRFuture:
     """
 
     __slots__ = ("query", "_service", "_wave_key", "_result", "_exception",
-                 "_done", "_callbacks")
+                 "_done", "_callbacks", "_trace")
 
     def __init__(self, query, service=None):
         self.query = query
         self._service = service
         self._wave_key = None          # scheduler key while pending
+        self._trace = None             # live obs trace when tracing is on
         self._result: Optional[Any] = None
         self._exception: Optional[BaseException] = None
         self._done = False

@@ -31,6 +31,7 @@ and a clock — unit tests drive it with a fake depth signal and no sockets.
 from __future__ import annotations
 
 import dataclasses
+import time
 from typing import Dict, Optional
 
 __all__ = ["AdmissionConfig", "AdmissionController"]
@@ -123,10 +124,22 @@ class AdmissionController:
         if not self.shedding and depth > cfg.high_water:
             self.shedding = True
             svc.telemetry.record_shed_transition(engaged=True)
+            self._event("shed_engaged", now, depth=depth)
         elif self.shedding and depth <= cfg.low_water:
             self.shedding = False
             svc.telemetry.record_shed_transition(engaged=False)
+            self._event("shed_recovered", now, depth=depth)
         return depth
+
+    def _event(self, kind: str, now: Optional[float], **attrs) -> None:
+        """Shed transitions into the service's flight recorder, when it has
+        one — unit tests drive this controller with bare stub services."""
+        recorder = getattr(self.service, "recorder", None)
+        if recorder is None:
+            return
+        if now is None:
+            now = getattr(self.service, "time_fn", time.monotonic)()
+        recorder.record_event(kind, now, **attrs)
 
     def admit(self, now: Optional[float] = None) -> Optional[float]:
         """Per-arrival decision: ``None`` admits; a float sheds, carrying the

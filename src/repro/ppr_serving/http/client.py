@@ -80,7 +80,14 @@ class AsyncHTTPClient:
             headers[name.strip().lower()] = value.strip()
         length = int(headers.get("content-length", "0") or 0)
         raw = await self._reader.readexactly(length) if length else b""
-        return status, headers, (json.loads(raw) if raw else {})
+        if not raw:
+            return status, headers, {}
+        # /v1/metrics serves Prometheus text exposition, not JSON — hand
+        # non-JSON bodies back as decoded text instead of crashing
+        if "application/json" in headers.get("content-type",
+                                             "application/json"):
+            return status, headers, json.loads(raw)
+        return status, headers, raw.decode("utf-8")
 
 
 async def http_request(host: str, port: int, method: str, path: str,

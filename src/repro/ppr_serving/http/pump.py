@@ -38,6 +38,18 @@ class WavePump:
         self.cycles = 0
         self.waves_launched = 0
         self._task: Optional[asyncio.Task] = None
+        # mirror the loop counters into the service's metrics registry so
+        # /v1/metrics can answer "is the heartbeat alive" without /v1/stats
+        registry = getattr(getattr(service, "telemetry", None),
+                           "registry", None)
+        if registry is not None:
+            self._cycles_metric = registry.counter(
+                "ppr_pump_cycles_total", "Pump heartbeat cycles run.")
+            self._waves_metric = registry.counter(
+                "ppr_pump_waves_launched_total",
+                "Waves launched from pump cycles (incl. the stop flush).")
+        else:
+            self._cycles_metric = self._waves_metric = None
 
     # ------------------------------------------------------------------
     def start(self) -> None:
@@ -57,17 +69,24 @@ class WavePump:
             except asyncio.CancelledError:
                 pass
             self._task = None
-        self.waves_launched += self.service.flush()
+        flushed = self.service.flush()
+        self.waves_launched += flushed
+        if self._waves_metric is not None and flushed:
+            self._waves_metric.get().inc(flushed)
         if self.admission is not None:
             self.admission.tick()      # record the drained queue / recovery
 
     async def _run(self) -> None:
         while True:
             self.cycles += 1
+            if self._cycles_metric is not None:
+                self._cycles_metric.get().inc()
             if self.admission is not None:
                 self.admission.tick()
             launched = self.service.poll()
             self.waves_launched += launched
+            if self._waves_metric is not None and launched:
+                self._waves_metric.get().inc(launched)
             # a launch may have unblocked more ready waves (κ changed, or a
             # deadline expired mid-wave) — loop immediately while productive,
             # yielding to the loop so handlers can run between waves

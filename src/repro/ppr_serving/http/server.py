@@ -17,6 +17,10 @@ Endpoints:
                       shed, 409 delta-invalidated, 410 graph-replaced
     GET  /v1/healthz  liveness + registered graphs + queue depth
     GET  /v1/stats    full ServiceTelemetry summary + admission + pump stats
+    GET  /v1/metrics  the metrics registry in Prometheus text exposition
+                      format (0.0.4); ``?format=json`` for the JSON dump
+    GET  /v1/debug/traces   flight-recorder snapshot (last completed traces
+                      + control-plane events); ``?n=K`` bounds both lists
 
 Status mapping is the rejection-path contract: a ``QueryRejected`` future is
 a *client-actionable* outcome (resubmit), never a 500 — and the future is
@@ -28,7 +32,9 @@ from __future__ import annotations
 import asyncio
 import dataclasses
 from typing import Any, Dict, Optional, Tuple
+from urllib.parse import parse_qs
 
+from repro.obs import prometheus_text
 from repro.ppr_serving.futures import QueryRejected
 from repro.ppr_serving.http.admission import AdmissionConfig, AdmissionController
 from repro.ppr_serving.http.pump import WavePump
@@ -59,8 +65,12 @@ class HTTPRequest:
 @dataclasses.dataclass(frozen=True)
 class HTTPResponse:
     status: int
-    payload: Dict[str, Any]            # JSON body
+    payload: Dict[str, Any]            # JSON body (ignored when body is set)
     headers: Tuple[Tuple[str, str], ...] = ()
+    # non-JSON responses (the Prometheus text exposition) set the raw body
+    # and its content type; ``payload`` then goes unrendered
+    body: Optional[bytes] = None
+    content_type: str = "application/json"
 
 
 class ServingApp:
@@ -78,20 +88,28 @@ class ServingApp:
     # ------------------------------------------------------------------
     async def handle(self, req: HTTPRequest) -> HTTPResponse:
         self.requests += 1
-        route = (req.method.upper(), req.path)
+        path, _, query_string = req.path.partition("?")
+        params = {k: v[-1] for k, v in parse_qs(query_string).items()}
+        route = (req.method.upper(), path)
         if route == ("POST", "/v1/ppr"):
             return await self._handle_ppr(req)
         if route == ("GET", "/v1/healthz"):
             return self._handle_healthz()
         if route == ("GET", "/v1/stats"):
             return self._handle_stats()
-        if req.path in ("/v1/ppr", "/v1/healthz", "/v1/stats"):
+        if route == ("GET", "/v1/metrics"):
+            return self._handle_metrics(params)
+        if route == ("GET", "/v1/debug/traces"):
+            return self._handle_traces(params)
+        if path in ("/v1/ppr", "/v1/healthz", "/v1/stats", "/v1/metrics",
+                    "/v1/debug/traces"):
             return HTTPResponse(405, error_payload(
-                f"method {req.method} not allowed on {req.path}",
+                f"method {req.method} not allowed on {path}",
                 "method-not-allowed"))
         return HTTPResponse(404, error_payload(
-            f"no route {req.method} {req.path} "
-            f"(have POST /v1/ppr, GET /v1/healthz, GET /v1/stats)",
+            f"no route {req.method} {path} "
+            f"(have POST /v1/ppr, GET /v1/healthz, GET /v1/stats, "
+            f"GET /v1/metrics, GET /v1/debug/traces)",
             "unknown-route"))
 
     # ------------------------------------------------------------------
@@ -186,6 +204,36 @@ class ServingApp:
             out["pump_waves_launched"] = self.pump.waves_launched
         return HTTPResponse(200, out)
 
+    def _handle_metrics(self, params: Dict[str, str]) -> HTTPResponse:
+        """The bounded metrics registry — Prometheus text exposition by
+        default (what a scraper ingests), ``?format=json`` for the flat
+        JSON snapshot."""
+        registry = self.service.telemetry.registry
+        if params.get("format") == "json":
+            return HTTPResponse(200, registry.as_dict())
+        return HTTPResponse(
+            200, {}, body=prometheus_text(registry).encode("utf-8"),
+            content_type="text/plain; version=0.0.4; charset=utf-8")
+
+    def _handle_traces(self, params: Dict[str, str]) -> HTTPResponse:
+        """Flight-recorder snapshot: the last completed query/wave traces and
+        control-plane events, ``?n=K`` limiting both lists."""
+        recorder = getattr(self.service, "recorder", None)
+        if recorder is None:
+            return HTTPResponse(404, error_payload(
+                "this service has no flight recorder", "no-recorder"))
+        n: Optional[int] = None
+        if "n" in params:
+            try:
+                n = max(0, int(params["n"]))
+            except ValueError:
+                return HTTPResponse(400, error_payload(
+                    f"n must be an integer, got {params['n']!r}",
+                    "bad-request"))
+        snap = recorder.snapshot(n_traces=n, n_events=n)
+        snap["tracing"] = getattr(self.service, "tracer", None) is not None
+        return HTTPResponse(200, snap)
+
 
 # ---------------------------------------------------------------------------
 # asyncio streams transport
@@ -265,10 +313,10 @@ class AsyncioHTTPTransport:
     @staticmethod
     def _write_response(writer: asyncio.StreamWriter,
                         resp: HTTPResponse) -> None:
-        body = dumps(resp.payload)
+        body = resp.body if resp.body is not None else dumps(resp.payload)
         reason = _REASONS.get(resp.status, "Unknown")
         head = [f"HTTP/1.1 {resp.status} {reason}",
-                "Content-Type: application/json",
+                f"Content-Type: {resp.content_type}",
                 f"Content-Length: {len(body)}"]
         head.extend(f"{k}: {v}" for k, v in resp.headers)
         writer.write(("\r\n".join(head) + "\r\n\r\n").encode("latin1") + body)

@@ -38,6 +38,10 @@ class Wave:
     key: Hashable                  # (graph, precision, mesh_key, epoch) in the
     items: List[Any]               # PPR service (epoch = the graph's delta count)
     full: bool                     # False ⇒ deadline-flushed partial wave
+    # per-item submit times (parallel to ``items``): launch time minus these
+    # is each occupant's admission wait — the queue-time half of its latency,
+    # which the launch path would otherwise lose the moment the wave forms
+    enqueued_at: List[float] = dataclasses.field(default_factory=list)
 
     def __len__(self) -> int:
         return len(self.items)
@@ -134,7 +138,8 @@ class WaveScheduler:
             for i in range(0, len(q), self.kappa):
                 chunk = q[i: i + self.kappa]
                 waves.append(Wave(key, [p.item for p in chunk],
-                                  full=len(chunk) == self.kappa))
+                                  full=len(chunk) == self.kappa,
+                                  enqueued_at=[p.enqueued_at for p in chunk]))
         return waves
 
     # ------------------------------------------------------------------
@@ -149,11 +154,15 @@ class WaveScheduler:
         for key in list(self._queues):
             q = self._queues[key]
             while len(q) >= self.kappa:
-                waves.append(Wave(key, [p.item for p in q[: self.kappa]], full=True))
+                waves.append(Wave(key, [p.item for p in q[: self.kappa]],
+                                  full=True,
+                                  enqueued_at=[p.enqueued_at
+                                               for p in q[: self.kappa]]))
                 del q[: self.kappa]
                 self._depth -= self.kappa
             if q and now >= min(p.flush_at(self.max_wait) for p in q):
-                waves.append(Wave(key, [p.item for p in q], full=False))
+                waves.append(Wave(key, [p.item for p in q], full=False,
+                                  enqueued_at=[p.enqueued_at for p in q]))
                 self._depth -= len(q)
                 q.clear()
             if not q:

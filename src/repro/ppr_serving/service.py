@@ -49,6 +49,7 @@ from repro.core.fixed_point import PAPER_FORMATS, QFormat, format_for_bits
 from repro.core.metrics import ranking
 from repro.graph_updates.delta import EdgeDelta
 from repro.graph_updates.warmstart import WarmStartStore
+from repro.obs import FlightRecorder, Tracer
 from repro.ppr_serving.cache import LRUCache
 from repro.ppr_serving.engine import engine_families, engine_for, family_members
 from repro.ppr_serving.futures import PPRFuture, QueryRejected
@@ -153,13 +154,24 @@ class PPRService:
         early_exit: Union[None, bool, ConvergencePolicy] = None,
         warm_start: Union[bool, int] = False,
         prefetch: Union[None, bool, PrefetchConfig] = None,
+        tracing: bool = False,
+        reservoir_size: int = 1024,
         time_fn=time.monotonic,
     ):
         """``warm_start`` seeds wave iterations from each personalization
         vertex's last converged column (True, or an int store capacity per
         graph) — pair it with ``early_exit`` so the shorter convergence
         distance actually saves iterations.  ``prefetch`` arms the idle-poll
-        cache warmer (True, or a ``PrefetchConfig``)."""
+        cache warmer (True, or a ``PrefetchConfig``).
+
+        ``tracing`` arms per-query/per-wave span traces (completed traces
+        land in ``self.recorder``, the flight recorder); off by default —
+        the hot path then pays one ``is None`` check per instrumentation
+        point.  The flight recorder itself is always on: control-plane
+        events (deltas, κ moves, shed/SLO transitions) are cheap and are
+        exactly what an incident postmortem needs.  ``reservoir_size``
+        bounds every telemetry percentile sample (see ``ServiceTelemetry``).
+        """
         self.kappa = kappa
         self.iterations = iterations
         self.alpha = alpha
@@ -167,7 +179,11 @@ class PPRService:
         self.time_fn = time_fn
         self.scheduler = WaveScheduler(kappa, max_wait=max_wait, time_fn=time_fn)
         self.cache = LRUCache(cache_capacity)
-        self.telemetry = ServiceTelemetry()
+        self.telemetry = ServiceTelemetry(reservoir_size=reservoir_size)
+        self.recorder = FlightRecorder()
+        self.tracer: Optional[Tracer] = (
+            Tracer(time_fn=time_fn, sink=self.recorder.record_trace)
+            if tracing else None)
         self.controller = PrecisionController(autotune or AutotuneConfig())
         if early_exit is True:
             self.convergence: Optional[ConvergencePolicy] = ConvergencePolicy()
@@ -236,6 +252,9 @@ class PPRService:
                     f"vertex {fut.query.vertex} was validated against the old "
                     f"topology and cannot be served — resubmit it against the "
                     f"new graph", code="graph-replaced"))
+                self._finish_rejected(fut, "graph-replaced")
+            self.recorder.record_event("graph_replaced", self.time_fn(),
+                                       graph=name)
             self.controller.forget_graph(name)
             if self._warm is not None:
                 self._warm.drop_graph(name)
@@ -327,6 +346,7 @@ class PPRService:
                     f"{epoch}): its personalization vertex is inside the "
                     f"delta's affected frontier — resubmit to recompute on "
                     f"the new topology", code="delta-invalidated"))
+                self._finish_rejected(fut, "delta-invalidated")
             else:
                 new_key = (key[0], key[1], key[2], epoch)
                 fut._wave_key = new_key
@@ -344,6 +364,10 @@ class PPRService:
         self.telemetry.record_delta(delta.num_added, delta.num_removed,
                                     cache_dropped, cache_retained,
                                     pending_dropped)
+        self.recorder.record_event(
+            "delta", self.time_fn(), graph=name, epoch=epoch,
+            edges_added=delta.num_added, edges_removed=delta.num_removed,
+            cache_dropped=cache_dropped, pending_dropped=pending_dropped)
         return {
             "epoch": epoch,
             "edges_added": delta.num_added,
@@ -382,6 +406,9 @@ class PPRService:
         if kappa == self.kappa:
             return
         self.telemetry.record_kappa_change(deepened=kappa > self.kappa)
+        self.recorder.record_event(
+            "kappa", self.time_fn(), kappa=kappa,
+            deepened=kappa > self.kappa, previous=self.kappa)
         self.kappa = kappa
         self.scheduler.kappa = kappa
 
@@ -395,6 +422,8 @@ class PPRService:
             return
         self.controller.set_target_ceiling(target)
         self.telemetry.record_slo_transition(degraded=True)
+        self.recorder.record_event("slo_degrade", self.time_fn(),
+                                   target=float(target))
 
     def restore_quality(self) -> None:
         """Lift the degradation ceiling (queue drained) — auto traffic
@@ -403,6 +432,7 @@ class PPRService:
             return
         self.controller.set_target_ceiling(None)
         self.telemetry.record_slo_transition(degraded=False)
+        self.recorder.record_event("slo_recover", self.time_fn())
 
     # ------------------------------------------------------------------
     def _resolve_precision(self, q: PPRQuery) -> str:
@@ -461,20 +491,43 @@ class PPRService:
                 f"k={q.k} exceeds the {rg.num_vertices - 1} recommendable "
                 f"vertices of {q.graph!r} (|V|={rg.num_vertices}, the query "
                 f"vertex excludes itself)")
+        tracer = self.tracer
+        tr = None
+        if tracer is not None:
+            tr = tracer.start("query", "query", graph=q.graph,
+                              vertex=int(q.vertex), k=int(q.k),
+                              requested=str(q.precision))
+            sp = tr.span("resolve_precision", self.time_fn())
         pkey = self._resolve_precision(q)
+        if tr is not None:
+            sp.end(self.time_fn(), precision=pkey)
         self.telemetry.record_query_vertex(q.graph, int(q.vertex),
                                            k=q.k, pkey=pkey)
         fut = PPRFuture(q, self)
+        if tr is not None:
+            fut._trace = tr
+            sp = tr.span("cache_probe", self.time_fn())
         hit = self.cache.get(self._cache_key(q, pkey))
         self.telemetry.record_cache(hit is not None)
+        if tr is not None:
+            sp.end(self.time_fn(), hit=hit is not None)
         if hit is not None:
             verts, scores = hit
             fut._resolve(Recommendation(q, verts.copy(), scores.copy(),
                                         source="cache", precision=pkey))
+            if tr is not None:
+                tracer.finish(tr, outcome="resolved", source="cache",
+                              precision=pkey)
+                fut._trace = None
             return fut
         key = (q.graph, pkey, rg.mesh_key, rg.epoch)
         fut._wave_key = key
-        self.scheduler.submit(key, fut, deadline=q.deadline)
+        now = self.time_fn()
+        self.scheduler.submit(key, fut, deadline=q.deadline, now=now)
+        # gauge at *submit* time, not just on control ticks: a burst's peak
+        # depth between ticks used to be invisible in queue_depth_peak
+        self.telemetry.record_queue_depth(self.scheduler.queue_depth(),
+                                          self.scheduler.oldest_wait_s(now))
         return fut
 
     def poll(self, now: Optional[float] = None) -> int:
@@ -654,6 +707,12 @@ class PPRService:
         P0[:, len(wave.items):] = P0[:, :1]
         return jnp.asarray(P0), len(seeds)
 
+    def _finish_rejected(self, fut: PPRFuture, code: str) -> None:
+        """Close a rejected future's live trace (if tracing is armed)."""
+        if self.tracer is not None and fut._trace is not None:
+            self.tracer.finish(fut._trace, outcome="rejected", code=code)
+            fut._trace = None
+
     def _run_wave(self, wave: Wave) -> List[Recommendation]:
         graph_name, pkey, mesh_key, _epoch = wave.key
         rg = self._graphs[graph_name]
@@ -662,6 +721,22 @@ class PPRService:
         self._wave_counter += 1
         wave_id = self._wave_counter
 
+        tracer = self.tracer
+        iterate_info: Dict[str, object] = {}
+        wtr = None
+        if tracer is not None:
+            wtr = tracer.start(
+                "wave", "wave", t=t0, wave_id=wave_id, graph=graph_name,
+                precision=pkey, mesh=mesh_key, full=wave.full,
+                n_queries=len(wave.items),
+                occupancy=len(wave.items) / self.kappa,
+                member_traces=[f._trace.trace_id for f in wave.items
+                               if f._trace is not None])
+        # queue time is half of each occupant's latency story — account it
+        # per member at launch, where it stops accruing
+        for enq in wave.enqueued_at:
+            self.telemetry.record_admission_wait(max(0.0, t0 - enq))
+
         # the graph's engine family decides how its waves iterate; arming
         # keeps late-bound engines in the delta device-refresh loop
         engine = engine_for(rg.engine_family, fmt is not None)
@@ -669,7 +744,9 @@ class PPRService:
         plan = engine.plan(rg, fmt, alpha=self.alpha,
                            iterations=self.iterations,
                            convergence=self.convergence,
-                           topk_tile=self.topk_tile)
+                           topk_tile=self.topk_tile,
+                           trace_hook=iterate_info.update
+                           if tracer is not None else None)
 
         queries = [fut.query for fut in wave.items]
         verts = [int(q.vertex) for q in queries]
@@ -678,11 +755,17 @@ class PPRService:
         pers = jnp.asarray(np.asarray(padded, np.int32))
 
         Vmat = plan.initial(pers)
+        t_plan = self.time_fn()
+        self.telemetry.record_stage("plan", t_plan - t0)
         P0, warm_cols = (self._warm_seed(rg, wave, pkey, Vmat)
                          if self._warm is not None else (Vmat, 0))
+        t_warm = self.time_fn()
+        self.telemetry.record_stage("warm_start", t_warm - t_plan)
         P, iters_run = plan.iterate(lambda P_: plan.step(Vmat, P_), P0)
         if iters_run < self.iterations:
             self.telemetry.record_early_exit(self.iterations - iters_run)
+        self.telemetry.record_wave_iterations(iters_run)
+        warm_saved = 0
         if self._warm is not None:
             P_host = np.asarray(P)
             for col, q in enumerate(queries):
@@ -690,10 +773,12 @@ class PPRService:
                                P_host[:, col].copy())
             if warm_cols:
                 base = self._cold_iters.get((graph_name, pkey))
-                saved = max(0, base - iters_run) if base is not None else 0
-                self.telemetry.record_warm_start(warm_cols, saved)
+                warm_saved = max(0, base - iters_run) if base is not None else 0
+                self.telemetry.record_warm_start(warm_cols, warm_saved)
             else:
                 self._cold_iters[(graph_name, pkey)] = iters_run
+        t_iter = self.time_fn()
+        self.telemetry.record_stage("iterate", t_iter - t_warm)
 
         k_max = max(q.k for q in queries)
         idx, vals = plan.topk(P, k_max, pers)
@@ -701,7 +786,9 @@ class PPRService:
         vals = np.asarray(vals)
         scores = vals.astype(np.float64) / plan.scale if plan.fixed \
             else vals.astype(np.float64)
-        latency = self.time_fn() - t0
+        t_topk = self.time_fn()
+        self.telemetry.record_stage("topk", t_topk - t_iter)
+        latency = t_topk - t0
 
         recs = []
         for col, fut in enumerate(wave.items):
@@ -716,9 +803,31 @@ class PPRService:
                                  precision=pkey)
             fut._resolve(rec)
             recs.append(rec)
+            if tracer is not None and fut._trace is not None:
+                tr = fut._trace
+                enq = (wave.enqueued_at[col]
+                       if col < len(wave.enqueued_at) else t0)
+                tr.span("admission_wait", enq).end(t0)
+                tr.span("wave_execute", t0, wave_id=wave_id,
+                        engine=plan.engine,
+                        **iterate_info).end(self.time_fn())
+                tracer.finish(tr, outcome="resolved", source="wave",
+                              precision=pkey,
+                              wave_trace=wtr.trace_id if wtr else None)
+                fut._trace = None
+        t_resolve = self.time_fn()
+        self.telemetry.record_stage("resolve", t_resolve - t_topk)
         self.telemetry.record_wave(len(wave.items), self.kappa, latency, pkey,
                                    mesh_key=mesh_key, engine=plan.engine)
         self._shadow_feedback(wave, rg, fmt, pkey, P)
+        if wtr is not None:
+            wtr.span("plan", t0).end(t_plan, engine=plan.engine)
+            wtr.span("warm_start", t_plan).end(
+                t_warm, warm_cols=warm_cols, iterations_saved=warm_saved)
+            wtr.span("iterate", t_warm).end(t_iter, **iterate_info)
+            wtr.span("topk", t_iter).end(t_topk, k_max=k_max)
+            wtr.span("resolve", t_topk).end(t_resolve)
+            tracer.finish(wtr, latency_s=latency, engine=plan.engine)
         return recs
 
     # ------------------------------------------------------------------

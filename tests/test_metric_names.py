@@ -1,0 +1,72 @@
+"""Metric-name snapshot: every metric family a fresh serving stack declares,
+asserted against a checked-in manifest — renaming or dropping a metric breaks
+dashboards and alert rules silently, so it must be an explicit diff in review
+(the mirror of tests/test_api_surface.py for the telemetry surface).
+
+The manifest is built from a traffic-free ``ServiceTelemetry`` (every family
+is pre-declared in ``reset()`` — see test_obs.py's zero-traffic export test)
+plus the pump's counters, each line ``name kind [labels]``.
+
+Regenerate after an *intentional* metric change:
+
+    PYTHONPATH=src python tests/test_metric_names.py --write
+"""
+import difflib
+import os
+import sys
+
+MANIFEST = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                        "metric_names.txt")
+
+
+def build_manifest() -> str:
+    from repro.ppr_serving.telemetry import ServiceTelemetry
+
+    registry = ServiceTelemetry().registry
+    # the pump registers its heartbeat counters against the same registry at
+    # construction; declare them here so the manifest covers the full stack
+    registry.counter("ppr_pump_cycles_total", "Pump heartbeat cycles run.")
+    registry.counter("ppr_pump_waves_launched_total",
+                     "Waves launched from pump cycles (incl. the stop flush).")
+
+    lines = [
+        "# Metric families of the PPR serving stack (generated — do not edit).",
+        "# Regenerate after an intentional metric change:",
+        "#   PYTHONPATH=src python tests/test_metric_names.py --write",
+        "",
+    ]
+    for name, kind, _help, _series in registry.collect():
+        fam = registry._families[name]
+        label_part = (" {" + ",".join(fam.label_names) + "}"
+                      if fam.label_names else "")
+        lines.append(f"{name} {kind}{label_part}")
+    return "\n".join(lines) + "\n"
+
+
+def test_metric_names_match_manifest():
+    current = build_manifest()
+    assert os.path.exists(MANIFEST), (
+        f"missing metric-name manifest {MANIFEST} — generate it with "
+        f"'PYTHONPATH=src python tests/test_metric_names.py --write'")
+    with open(MANIFEST) as f:
+        committed = f.read()
+    if current != committed:
+        diff = "\n".join(difflib.unified_diff(
+            committed.splitlines(), current.splitlines(),
+            fromfile="committed manifest", tofile="current metrics",
+            lineterm=""))
+        raise AssertionError(
+            "the serving stack's metric names drifted from the committed "
+            "manifest — that silently breaks dashboards and alert rules.  "
+            "If the change is intentional, regenerate with "
+            "'PYTHONPATH=src python tests/test_metric_names.py --write' and "
+            "commit the diff.\n" + diff)
+
+
+if __name__ == "__main__":
+    if "--write" in sys.argv:
+        with open(MANIFEST, "w") as f:
+            f.write(build_manifest())
+        print(f"wrote {MANIFEST}")
+    else:
+        print(build_manifest(), end="")

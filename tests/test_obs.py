@@ -1,0 +1,401 @@
+"""Observability layer: bounded instruments (histogram bucket boundaries,
+reservoir eviction, label-cardinality containment), deterministic span trees
+under an injected clock, flight-recorder ring wraparound, telemetry memory
+boundedness, Prometheus text exposition (parsed as a scraper would), and the
+acceptance e2e — a query through the real HTTP tier leaving a complete trace
+retrievable from /v1/debug/traces."""
+import asyncio
+import math
+import re
+
+import pytest
+
+from repro.graphs import holme_kim_powerlaw
+from repro.obs import (
+    Counter,
+    FlightRecorder,
+    Gauge,
+    Histogram,
+    MetricsRegistry,
+    Reservoir,
+    Tracer,
+    exponential_buckets,
+    format_event,
+    format_trace,
+    prometheus_text,
+)
+from repro.ppr_serving import PPRHTTPServer, PPRQuery, PPRService
+from repro.ppr_serving.http import http_request
+from repro.ppr_serving.telemetry import ServiceTelemetry
+
+
+class FakeClock:
+    def __init__(self):
+        self.t = 0.0
+
+    def __call__(self):
+        return self.t
+
+
+@pytest.fixture(scope="module")
+def graph():
+    return holme_kim_powerlaw(300, m=4, seed=2)
+
+
+# ---------------------------------------------------------------------------
+# instruments
+# ---------------------------------------------------------------------------
+def test_counter_is_monotone():
+    c = Counter()
+    c.inc()
+    c.inc(2.5)
+    assert c.value == 3.5
+    with pytest.raises(ValueError):
+        c.inc(-1)
+
+
+def test_gauge_tracks_last_and_peak():
+    g = Gauge()
+    g.set(3)
+    g.set(9)
+    g.set(1)
+    assert g.value == 1.0 and g.peak == 9.0
+
+
+def test_exponential_buckets_values_and_validation():
+    assert exponential_buckets(1.0, 2.0, 4) == (1.0, 2.0, 4.0, 8.0)
+    for bad in [(0.0, 2.0, 4), (1.0, 1.0, 4), (1.0, 2.0, 0)]:
+        with pytest.raises(ValueError):
+            exponential_buckets(*bad)
+
+
+def test_histogram_bucket_boundaries():
+    """Bounds are inclusive upper edges (Prometheus ``le`` semantics): an
+    observation exactly on a bound lands in that bound's bucket."""
+    h = Histogram(bounds=(1.0, 2.0, 4.0))
+    for v in (0.5, 1.0, 2.0, 3.0, 4.0, 100.0):
+        h.observe(v)
+    # per-bucket: (<=1): 0.5, 1.0 | (<=2): 2.0 | (<=4): 3.0, 4.0 | inf: 100.0
+    assert h.bucket_counts == [2, 1, 2, 1]
+    assert h.cumulative() == [(1.0, 2), (2.0, 3), (4.0, 5), (math.inf, 6)]
+    assert h.count == 6
+    assert h.sum == pytest.approx(110.5)
+    assert h.mean == pytest.approx(110.5 / 6)
+
+
+def test_histogram_rejects_bad_bounds():
+    for bad in [(), (2.0, 1.0), (1.0, 1.0)]:
+        with pytest.raises(ValueError):
+            Histogram(bounds=bad)
+
+
+def test_reservoir_exact_below_capacity():
+    r = Reservoir(size=8)
+    for v in range(5):
+        r.add(float(v))
+    assert r.values() == [0.0, 1.0, 2.0, 3.0, 4.0]
+    assert r.n_seen == 5 and r.sum == 10.0
+    assert r.percentile(50) == 2.0
+    assert r.percentile(0) == 0.0 and r.percentile(100) == 4.0
+
+
+def test_reservoir_eviction_is_bounded_uniform_and_deterministic():
+    r = Reservoir(size=16, seed=7)
+    for v in range(10_000):
+        r.add(float(v))
+    assert len(r.values()) == 16          # bounded
+    assert r.n_seen == 10_000
+    assert r.sum == float(sum(range(10_000)))   # sum stays exact
+    # Algorithm R keeps a uniform sample: with 10k uniform arrivals the held
+    # sample's spread must cover the stream, not just the head or tail
+    vals = sorted(r.values())
+    assert vals[0] < 2_500 and vals[-1] > 7_500
+    # seeded: a replay holds the identical sample
+    r2 = Reservoir(size=16, seed=7)
+    for v in range(10_000):
+        r2.add(float(v))
+    assert r.values() == r2.values()
+
+
+def test_registry_get_or_create_and_kind_mismatch():
+    reg = MetricsRegistry()
+    c = reg.counter("x_total", "help")
+    assert reg.counter("x_total") is c
+    with pytest.raises(ValueError):
+        reg.gauge("x_total")
+    with pytest.raises(ValueError):
+        reg.counter("x_total", labels=("a",))
+
+
+def test_registry_label_cardinality_collapses_to_overflow():
+    reg = MetricsRegistry(max_series=3)
+    fam = reg.counter("c_total", labels=("who",))
+    for i in range(10):
+        fam.labels(who=f"u{i}").inc()
+    series = dict(fam.series())
+    assert len(series) == 4               # 3 real + 1 overflow
+    assert series[(("who", "_overflow"),)].value == 7.0
+
+
+def test_labeled_family_rejects_wrong_labels_and_bare_get():
+    reg = MetricsRegistry()
+    fam = reg.counter("c_total", labels=("a",))
+    with pytest.raises(ValueError):
+        fam.labels(b="x")
+    with pytest.raises(ValueError):
+        fam.get()
+
+
+# ---------------------------------------------------------------------------
+# tracing: deterministic span trees under an injected clock
+# ---------------------------------------------------------------------------
+def test_span_tree_deterministic_under_fake_clock():
+    clk = FakeClock()
+    sink = []
+    tracer = Tracer(time_fn=clk, sink=sink.append)
+    tr = tracer.start("query", "query", graph="g", vertex=3)
+    clk.t = 1.0
+    sp = tr.span("cache_probe", clk())
+    clk.t = 1.5
+    sp.end(clk(), hit=False)
+    clk.t = 4.0
+    tracer.finish(tr, outcome="resolved")
+    assert tracer.started == 1 and tracer.finished == 1
+    assert [t.trace_id for t in sink] == [1]
+    d = tr.to_dict()
+    assert d == {
+        "trace_id": 1, "kind": "query",
+        "root": {
+            "name": "query", "start_s": 0.0, "end_s": 4.0, "duration_s": 4.0,
+            "attrs": {"graph": "g", "vertex": 3, "outcome": "resolved"},
+            "children": [{"name": "cache_probe", "start_s": 1.0,
+                          "end_s": 1.5, "duration_s": 0.5,
+                          "attrs": {"hit": False}}],
+        },
+    }
+    # finish is idempotent: a second completion path records nothing new
+    clk.t = 99.0
+    tracer.finish(tr, outcome="late")
+    assert tr.root.end_s == 4.0 and len(sink) == 1
+
+    rendered = format_trace(d)
+    assert "trace 1 (query)" in rendered
+    assert "cache_probe" in rendered
+
+
+def test_nested_spans_render_depth():
+    clk = FakeClock()
+    tracer = Tracer(time_fn=clk)
+    tr = tracer.start("wave", "wave")
+    outer = tr.span("iterate", 0.0)
+    outer.child("step", 0.1).end(0.2)
+    outer.end(0.3)
+    tracer.finish(tr)
+    lines = format_trace(tr.to_dict()).splitlines()
+    assert lines[1].startswith("  wave")
+    assert lines[2].startswith("    iterate")
+    assert lines[3].startswith("      step")
+
+
+# ---------------------------------------------------------------------------
+# flight recorder
+# ---------------------------------------------------------------------------
+def test_flight_recorder_ring_wraparound():
+    clk = FakeClock()
+    rec = FlightRecorder(trace_capacity=4, event_capacity=3)
+    tracer = Tracer(time_fn=clk, sink=rec.record_trace)
+    for i in range(10):
+        clk.t = float(i)
+        tracer.finish(tracer.start("query", "query", seq=i))
+    assert rec.traces_recorded == 10
+    held = rec.traces()
+    assert len(held) == 4                 # ring: only the last 4 survive
+    assert [t["root"]["attrs"]["seq"] for t in held] == [6, 7, 8, 9]
+    assert rec.traces(2) == held[-2:]     # tail-n, oldest first
+
+    for i in range(7):
+        rec.record_event("kappa", float(i), kappa=2 ** i)
+    assert rec.events_recorded == 7
+    assert [e["kappa"] for e in rec.events()] == [16, 32, 64]
+
+    snap = rec.snapshot(n_traces=1, n_events=1)
+    assert snap["trace_capacity"] == 4 and snap["event_capacity"] == 3
+    assert len(snap["traces"]) == 1 and len(snap["events"]) == 1
+    assert "kappa" in format_event(snap["events"][0])
+
+
+# ---------------------------------------------------------------------------
+# telemetry: bounded memory, documented knob
+# ---------------------------------------------------------------------------
+def test_telemetry_memory_is_bounded_in_queries_served():
+    t = ServiceTelemetry(reservoir_size=32)
+    for i in range(5_000):
+        t.record_wave(3, 8, 0.001 * (i + 1), "Q1.7", engine="fixed")
+        t.record_shadow(0.9)
+    assert t.waves == 5_000 and t.queries_served == 15_000
+    # the legacy list views are reservoir-backed: bounded at the knob
+    assert len(t.wave_latencies_s) == 32
+    assert len(t.wave_occupancies) == 32
+    assert len(t.shadow_scores) == 32
+    assert len(t.wave_latencies_by_engine["fixed"]) == 32
+    assert len(t.wave_precisions) == 32
+    # exact lifetime aggregates survive eviction
+    s = t.summary()
+    assert s["waves"] == 5_000
+    assert s["mean_occupancy"] == pytest.approx(3 / 8)
+    assert s["shadow_quality_mean"] == pytest.approx(0.9)
+    assert t.engine_stats()["fixed"]["waves"] == 5_000
+
+
+def test_telemetry_record_stage_rejects_unknown_stage():
+    t = ServiceTelemetry()
+    with pytest.raises(ValueError):
+        t.record_stage("not-a-stage", 0.1)
+
+
+# ---------------------------------------------------------------------------
+# Prometheus text exposition
+# ---------------------------------------------------------------------------
+_SAMPLE_RE = re.compile(
+    r'^(?P<name>[a-zA-Z_:][a-zA-Z0-9_:]*)'
+    r'(?P<labels>\{[^{}]*\})? '
+    r'(?P<value>[0-9eE.+-]+|\+Inf|-Inf|NaN)$')
+_LABEL_RE = re.compile(r'([a-zA-Z_][a-zA-Z0-9_]*)="((?:[^"\\]|\\.)*)"')
+
+
+def parse_prometheus(text):
+    """Parse text exposition the way a scraper does: returns
+    ``{family: kind}`` and ``[(name, labels_dict, value)]`` samples, raising
+    on any malformed line."""
+    families, samples = {}, []
+    for line in text.splitlines():
+        if not line:
+            continue
+        if line.startswith("# HELP "):
+            continue
+        if line.startswith("# TYPE "):
+            _, _, name, kind = line.split(" ", 3)
+            assert kind in ("counter", "gauge", "histogram", "summary"), line
+            families[name] = kind
+            continue
+        assert not line.startswith("#"), f"unknown comment: {line}"
+        m = _SAMPLE_RE.match(line)
+        assert m, f"malformed sample line: {line!r}"
+        labels = dict(_LABEL_RE.findall(m.group("labels") or ""))
+        samples.append((m.group("name"), labels, m.group("value")))
+    for name, _, _ in samples:
+        base = re.sub(r"_(bucket|sum|count)$", "", name)
+        assert name in families or base in families, \
+            f"sample {name} has no TYPE declaration"
+    return families, samples
+
+
+def test_prometheus_text_round_trips_through_a_parser():
+    reg = MetricsRegistry(reservoir_size=8)
+    reg.counter("ppr_waves_total", "Waves.").get().inc(5)
+    reg.gauge("ppr_queue_depth", "Depth.").get().set(3)
+    h = reg.histogram("ppr_lat_seconds", "Latency.", bounds=(0.1, 1.0))
+    h.get().observe(0.05)
+    h.get().observe(5.0)
+    r = reg.reservoir("ppr_lat_q", "Sample.")
+    r.get().add(1.0)
+    fam = reg.counter("ppr_served_total", "Served.", labels=("precision",))
+    fam.labels(precision='we"ird\\fmt\n').inc()
+
+    families, samples = parse_prometheus(prometheus_text(reg))
+    assert families["ppr_waves_total"] == "counter"
+    assert families["ppr_lat_seconds"] == "histogram"
+    assert families["ppr_lat_q"] == "summary"
+    by_name = {}
+    for name, labels, value in samples:
+        by_name.setdefault(name, []).append((labels, value))
+    assert by_name["ppr_waves_total"] == [({}, "5")]
+    # gauges export value + running peak
+    assert ({}, "3") in by_name["ppr_queue_depth"]
+    assert ({}, "3") in by_name["ppr_queue_depth_peak"]
+    # histogram: cumulative buckets end at +Inf == count
+    les = {lab["le"]: v for lab, v in by_name["ppr_lat_seconds_bucket"]}
+    assert les == {"0.1": "1", "1": "1", "+Inf": "2"}
+    assert by_name["ppr_lat_seconds_count"] == [({}, "2")]
+    # summary quantiles
+    qs = {lab["quantile"] for lab, _ in by_name["ppr_lat_q"]}
+    assert qs == {"0.5", "0.95", "0.99"}
+    # label escaping survived the parse round-trip
+    (labels, _), = by_name["ppr_served_total"]
+    assert labels["precision"] == r'we\"ird\\fmt\n'
+
+
+def test_service_registry_exports_all_families_without_traffic():
+    """Every pre-declared family exports (zero-valued) before any wave runs —
+    dashboards see stable series from first scrape."""
+    t = ServiceTelemetry()
+    families, samples = parse_prometheus(prometheus_text(t.registry))
+    assert "ppr_waves_total" in families
+    assert "ppr_wave_stage_seconds" in families
+    assert "ppr_admission_wait_seconds" in families
+    assert ("ppr_waves_total", {}, "0") in samples
+
+
+# ---------------------------------------------------------------------------
+# acceptance e2e: trace + metrics through the real HTTP tier
+# ---------------------------------------------------------------------------
+def test_e2e_http_trace_and_prometheus_wire(graph):
+    """One query through the real asyncio HTTP server yields (a) a complete
+    query trace and its wave trace retrievable from GET /v1/debug/traces,
+    and (b) a GET /v1/metrics body that parses as Prometheus text."""
+    svc = PPRService(kappa=2, iterations=4, max_wait=0.001, tracing=True)
+    svc.register_graph("g", graph, formats=[16])
+    server = PPRHTTPServer(svc, pump_interval_s=0.005)
+
+    async def scenario():
+        await server.start()
+        try:
+            host, port = server.host, server.port
+            status, _, rec = await http_request(
+                host, port, "POST", "/v1/ppr",
+                {"graph": "g", "vertex": 5, "k": 4, "precision": "Q1.15"})
+            assert status == 200
+            assert len(rec["recommendations"]) == 4
+
+            status, headers, body = await http_request(
+                host, port, "GET", "/v1/metrics")
+            assert status == 200
+            assert headers["content-type"].startswith("text/plain")
+            families, samples = parse_prometheus(body)
+            assert families["ppr_waves_total"] == "counter"
+            assert ("ppr_waves_total", {}, "1") in samples
+            assert "ppr_pump_cycles_total" in families
+            stage_counts = {lab["stage"]: v for name, lab, v in samples
+                            if name == "ppr_wave_stage_seconds_count"}
+            assert stage_counts.get("iterate") == "1"
+
+            status, _, js = await http_request(
+                host, port, "GET", "/v1/metrics?format=json")
+            assert status == 200
+            assert js["ppr_waves_total"] == 1
+
+            status, _, snap = await http_request(
+                host, port, "GET", "/v1/debug/traces?n=10")
+            assert status == 200 and snap["tracing"]
+            return snap
+        finally:
+            await server.stop()
+
+    snap = asyncio.run(scenario())
+    traces = {t["kind"]: t for t in snap["traces"]}
+    assert set(traces) == {"query", "wave"}
+    q, w = traces["query"], traces["wave"]
+    # the complete query trace: precision resolution, cache probe, admission
+    # wait, wave execution — finished, linked to its wave
+    names = [c["name"] for c in q["root"]["children"]]
+    assert names == ["resolve_precision", "cache_probe", "admission_wait",
+                     "wave_execute"]
+    assert q["root"]["attrs"]["outcome"] == "resolved"
+    assert q["root"]["attrs"]["wave_trace"] == w["trace_id"]
+    assert q["root"]["end_s"] is not None
+    # and the wave side: stage spans + the member link back
+    wnames = [c["name"] for c in w["root"]["children"]]
+    assert wnames == ["plan", "warm_start", "iterate", "topk", "resolve"]
+    assert q["trace_id"] in w["root"]["attrs"]["member_traces"]
+    it = dict(w["root"]["children"][2]["attrs"])
+    assert it["iterations_run"] == 4 and it["budget"] == 4
