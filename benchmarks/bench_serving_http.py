@@ -69,6 +69,7 @@ async def _run_level(g, mode: str, offered: int, n_requests: int,
     # warm the jit caches outside the timed window (base κ; deepened κ
     # shapes compile mid-overload, which the open-loop rows absorb as real
     # first-hit cost)
+    # repro: allow[ASY303] jit warmup before server.start() — nothing else is scheduled on the loop yet
     svc.run_batch([PPRQuery("g", v, k=10, precision="auto")
                    for v in range(min(kappa, g.num_vertices))])
     svc.telemetry.reset()

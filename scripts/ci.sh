@@ -17,6 +17,38 @@ echo "== snapshot manifests (API surface + metric names) =="
 # manifest fails loudly here with the regen command in the diff output
 python -m pytest -q tests/test_api_surface.py tests/test_metric_names.py
 
+echo "== static analysis: repro.analysis --check (findings report committed) =="
+# the analyzer gates on any unbaselined finding OR stale baseline entry; the
+# JSON report is a committed artifact so every PR carries its findings ledger
+python -m repro.analysis --check --json ANALYSIS_findings.json
+
+echo "== static analysis: negative self-test (one injected violation per pack) =="
+# the gate is only trustworthy if it demonstrably FAILS on bad code: inject
+# one violation per rule pack into a scratch tree and require nonzero exit
+selftest="$(mktemp -d)"
+trap 'rm -rf "$selftest"' EXIT
+cat > "$selftest/fxp_bad.py" <<'EOF'
+def combine(a_raw, b_raw):
+    return a_raw * b_raw
+EOF
+cat > "$selftest/jax_bad.py" <<'EOF'
+@jax.jit
+def step(x):
+    return float(x)
+EOF
+cat > "$selftest/asy_bad.py" <<'EOF'
+async def run(self):
+    self.service.poll()
+EOF
+for bad in fxp_bad.py jax_bad.py asy_bad.py; do
+    if python -m repro.analysis "$selftest/$bad" --root "$selftest" \
+            > /dev/null 2>&1; then
+        echo "FATAL: analyzer passed injected violation $bad" >&2
+        exit 1
+    fi
+done
+echo "analyzer correctly rejected all 3 injected violations"
+
 echo "== examples smoke (ported to the futures API, deprecation-clean) =="
 # the ported examples must not touch the deprecated serve()/pump()/drain()
 # wrappers — the warning is attributed to the calling frame (stacklevel), so

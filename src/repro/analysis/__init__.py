@@ -1,0 +1,53 @@
+"""repro.analysis — repo-specific static analysis, gated in CI.
+
+Design note
+===========
+
+The paper's claim is *provably safe* reduced precision: Q-format choices
+where raw accumulation cannot overflow and truncation error is bounded.
+Until this package, those invariants — and the serving stack's "never block
+the event loop / never sync inside a wave body" disciplines — were enforced
+by convention and re-broken by hand in PRs 3–5.  This package turns the
+conventions into checkable rules over the stdlib ``ast`` (no new runtime
+dependencies; the analyzer must run anywhere CI does).
+
+Architecture — three small layers:
+
+``core``
+    ``Finding`` / ``Rule`` + registry, ``FileContext`` (one parsed file with
+    its ``tokenize``-derived comment tables), the driver, and the repo-derived
+    ``AnalysisConfig`` (the widest registered ``QFormat`` is parsed out of
+    ``core/fixed_point.py``'s AST, so width rules track the actual precision
+    ladder).
+
+rule packs
+    ``fixedpoint`` (FXP001 raw-accumulation-width, FXP002
+    shift-discards-bits, FXP003 raw-domain-discipline), ``jax_hygiene``
+    (JAX101 implicit-sync, JAX102 host-numpy-on-traced, JAX103
+    traced-control-flow — scoped to jitted or ``# repro: hot-path``-marked
+    functions so telemetry/debug code stays exempt), ``async_serving``
+    (ASY301 blocking-call-in-async, ASY302 blocking-future-result, ASY303
+    sync-service-call-in-async, ASY304 future-leak — scoped to ``async def``
+    bodies).
+
+``baseline`` + ``cli``
+    ``python -m repro.analysis`` with text/JSON output, ``--check`` gating in
+    ``scripts/ci.sh``, and a committed (ideally empty) findings baseline.
+
+Philosophy: rules are *taint passes with teeth* — deliberately simple
+forward passes over one function at a time, tuned to this repo's idioms
+(``_raw`` naming, ``fmt.mul``, ``service.poll``).  False-positive control is
+structural (only fire on derived facts, e.g. FXP002 needs an actually
+inferred width) plus explicit: every silenced finding needs an inline
+``# repro: allow[RULE-ID] reason`` — a bare ``allow`` suppresses nothing and
+is itself reported (SUP000).  The committed baseline can only shrink:
+``--check`` fails on stale entries too.
+"""
+from .core import (AnalysisConfig, AnalysisResult, FileContext, Finding,
+                   Rule, all_rules, analyze_paths, get_rule, load_config,
+                   register_rule)
+
+__all__ = [
+    "AnalysisConfig", "AnalysisResult", "FileContext", "Finding", "Rule",
+    "all_rules", "analyze_paths", "get_rule", "load_config", "register_rule",
+]

@@ -1,0 +1,313 @@
+"""Rule pack 1 — fixed-point width safety (FXP...).
+
+The paper's correctness story is that raw Q-format arithmetic never silently
+overflows: products go through the 16-bit-limb ``QFormat.mul``, accumulations
+are cast to a wider signed dtype before summation (exact for mass-bounded
+sums while the widest registered format stays under
+``AnalysisConfig.int32_safe_bits``), and raw/float domains only meet inside
+the blessed conversion helpers.  These rules make the conventions checkable:
+
+- **FXP001 raw-accumulation-width** — ``segment_sum(...)`` / ``.sum(...)``
+  over a raw-domain operand without an ``.astype(int32/int64)`` width guard.
+- **FXP002 shift-discards-bits** — ``x << k`` (constant ``k``) where the
+  inferred width of ``x`` plus ``k`` exceeds 32: set bits fall off the top of
+  the uint32 lane.  Carry-tracked shifts (the limb multiplier) suppress this
+  with an ``allow`` comment explaining how the lost bits are reconstructed.
+- **FXP003 raw-domain-discipline** — ``*`` between two raw operands outside
+  ``QFormat.mul`` (raw×raw needs the limb decomposition), or arithmetic
+  mixing a raw operand with a float literal (scale confusion).
+
+Raw-domain tracking is a per-function taint pass: parameters and locals whose
+name contains ``raw`` seed the set; assignment propagates through arithmetic,
+subscripts, and ``fmt.mul(...)`` results; ``to_float``/``astype(float...)``
+clears the taint.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Dict, Iterator, Optional, Set
+
+from . import _astutil as A
+from .core import FileContext, Finding, Rule, register_rule
+
+_INT_GUARDS = {"int32", "int64", "i32", "i64"}
+_FLOAT_CASTS = {"float32", "float64", "f32", "f64", "float"}
+_TO_FLOAT_HELPERS = {"to_float", "quantize_f32"}
+_RAW_PRODUCERS = {"from_float", "quantize_raw"}
+
+
+def _name_is_raw(name: str) -> bool:
+    return "raw" in name.lower()
+
+
+def _raw_vars_for_function(fn: ast.AST) -> Set[str]:
+    """One forward pass over the function body collecting raw-tainted locals."""
+    raw: Set[str] = {p for p in A.param_names(fn) if _name_is_raw(p)}
+
+    def expr_is_raw(node: ast.AST) -> bool:
+        if isinstance(node, ast.Call):
+            name = A.call_name(node)
+            if name:
+                leaf = name.rsplit(".", 1)[-1]
+                if leaf in _TO_FLOAT_HELPERS:
+                    return False
+                if leaf in _RAW_PRODUCERS or leaf == "mul":
+                    return True
+            if A.is_astype_to(node, _FLOAT_CASTS):
+                return False
+            if isinstance(node.func, ast.Attribute):
+                # .astype(int)/.sum()/slicing helpers keep the domain
+                return expr_is_raw(node.func.value) or any(
+                    expr_is_raw(a) for a in node.args)
+            return any(expr_is_raw(a) for a in node.args)
+        if isinstance(node, ast.Name):
+            return node.id in raw or _name_is_raw(node.id)
+        if isinstance(node, ast.Attribute):
+            return _name_is_raw(node.attr)
+        if isinstance(node, ast.BinOp):
+            return expr_is_raw(node.left) or expr_is_raw(node.right)
+        if isinstance(node, ast.Subscript):
+            return expr_is_raw(node.value)
+        if isinstance(node, (ast.Tuple, ast.List)):
+            return any(expr_is_raw(e) for e in node.elts)
+        return False
+
+    for stmt in ast.walk(fn):
+        if isinstance(stmt, ast.Assign) and len(stmt.targets) == 1:
+            tgt = stmt.targets[0]
+            if isinstance(tgt, ast.Name):
+                if expr_is_raw(stmt.value):
+                    raw.add(tgt.id)
+                else:
+                    raw.discard(tgt.id)
+    return raw
+
+
+class _RawTaint:
+    """Raw-domain query helper bound to one function's taint set."""
+
+    def __init__(self, fn: ast.AST):
+        self.raw = _raw_vars_for_function(fn)
+
+    def is_raw(self, node: ast.AST) -> bool:
+        if isinstance(node, ast.Name):
+            return node.id in self.raw or _name_is_raw(node.id)
+        if isinstance(node, ast.Attribute):
+            return _name_is_raw(node.attr)
+        if isinstance(node, ast.Subscript):
+            return self.is_raw(node.value)
+        if isinstance(node, ast.BinOp):
+            return self.is_raw(node.left) or self.is_raw(node.right)
+        if isinstance(node, ast.Call):
+            name = A.call_name(node)
+            if name:
+                leaf = name.rsplit(".", 1)[-1]
+                if leaf in _TO_FLOAT_HELPERS:
+                    return False
+                if leaf in _RAW_PRODUCERS or leaf == "mul":
+                    return True
+            if A.is_astype_to(node, _FLOAT_CASTS):
+                return False
+            if isinstance(node.func, ast.Attribute):
+                return self.is_raw(node.func.value)
+        return False
+
+
+def _has_int_guard(node: ast.AST) -> bool:
+    """True when ``node`` is (or contains as its outermost cast) an
+    ``.astype(int32/int64)``."""
+    if A.is_astype_to(node, _INT_GUARDS):
+        return True
+    # (expr).astype(i32).sum(0): the receiver of .sum carries the guard
+    if isinstance(node, ast.Call) and isinstance(node.func, ast.Attribute):
+        return _has_int_guard(node.func.value)
+    if isinstance(node, ast.Subscript):
+        return _has_int_guard(node.value)
+    return False
+
+
+@register_rule
+class RawAccumulationWidth(Rule):
+    id = "FXP001"
+    name = "raw-accumulation-width"
+    doc = ("Raw-domain accumulation (segment_sum / .sum) without an "
+           ".astype(int32/int64) width guard: uint32 lane sums of raw values "
+           "can wrap once formats widen.")
+
+    def check(self, ctx: FileContext) -> Iterator[Finding]:
+        bits = ctx.config.max_format_bits
+        guard = "int32" if bits <= ctx.config.int32_safe_bits else "int64"
+        for fn in A.func_defs(ctx.tree):
+            taint = _RawTaint(fn)
+            for node in ast.walk(fn):
+                if not isinstance(node, ast.Call):
+                    continue
+                name = A.call_name(node)
+                leaf = name.rsplit(".", 1)[-1] if name else ""
+                if leaf == "segment_sum" and node.args:
+                    acc = node.args[0]
+                elif (leaf == "sum" and isinstance(node.func, ast.Attribute)):
+                    acc = node.func.value
+                else:
+                    continue
+                if taint.is_raw(acc) and not _has_int_guard(acc):
+                    yield self.finding(
+                        ctx, node,
+                        f"raw-domain accumulation without a width guard; "
+                        f"registered formats reach {bits} bits — cast the "
+                        f"operand with .astype(jnp.{guard}) so the sum is "
+                        f"exact, or widen the lane")
+
+
+# -- FXP002: symbolic width inference ---------------------------------------
+
+_WIDTH_UNKNOWN = 32
+
+
+def _infer_width(node: ast.AST, local_widths: Dict[str, int]) -> int:
+    """Upper bound on the number of significant bits of ``node`` in a uint32
+    lane.  Unknown expressions are assumed full-width (32)."""
+    if isinstance(node, ast.Constant) and isinstance(node.value, int):
+        return max(node.value.bit_length(), 1)
+    if isinstance(node, ast.Name):
+        return local_widths.get(node.id, _WIDTH_UNKNOWN)
+    if isinstance(node, ast.Compare):
+        return 1
+    if isinstance(node, ast.Call):
+        # (a < b).astype(u32) — a 0/1 mask keeps width 1
+        if isinstance(node.func, ast.Attribute) and node.func.attr == "astype":
+            return _infer_width(node.func.value, local_widths)
+        return _WIDTH_UNKNOWN
+    if isinstance(node, ast.BinOp):
+        op = node.op
+        lw = _infer_width(node.left, local_widths)
+        rw = _infer_width(node.right, local_widths)
+        if isinstance(op, ast.BitAnd):
+            # masking bounds the result by the narrower side
+            for side in (node.left, node.right):
+                if isinstance(side, ast.Constant) and isinstance(side.value, int):
+                    return max(side.value.bit_length(), 1)
+            return min(lw, rw)
+        if isinstance(op, ast.RShift):
+            if isinstance(node.right, ast.Constant) and isinstance(node.right.value, int):
+                return max(lw - node.right.value, 0)
+            return lw
+        if isinstance(op, ast.LShift):
+            if isinstance(node.right, ast.Constant) and isinstance(node.right.value, int):
+                return lw + node.right.value
+            return 64
+        if isinstance(op, ast.Mult):
+            return lw + rw
+        if isinstance(op, (ast.Add, ast.Sub)):
+            return max(lw, rw) + 1
+        if isinstance(op, (ast.BitOr, ast.BitXor)):
+            return max(lw, rw)
+    if isinstance(node, ast.Subscript):
+        return _infer_width(node.value, local_widths)
+    return _WIDTH_UNKNOWN
+
+
+def _module_const_widths(tree: ast.AST) -> Dict[str, int]:
+    """Widths of module-level integer constants, including wrapped ones like
+    ``_MASK16 = np.uint32(0xFFFF)`` — the masks the limb code shifts against."""
+    widths: Dict[str, int] = {}
+    for stmt in getattr(tree, "body", []):
+        if not (isinstance(stmt, ast.Assign) and len(stmt.targets) == 1
+                and isinstance(stmt.targets[0], ast.Name)):
+            continue
+        value = stmt.value
+        if isinstance(value, ast.Call) and len(value.args) == 1:
+            value = value.args[0]
+        if isinstance(value, ast.Constant) and isinstance(value.value, int):
+            widths[stmt.targets[0].id] = max(value.value.bit_length(), 1)
+    return widths
+
+
+def _local_widths(fn: ast.AST, seed: Optional[Dict[str, int]] = None) -> Dict[str, int]:
+    """Forward pass recording each single-assignment local's inferred width."""
+    widths: Dict[str, int] = dict(seed or {})
+    for stmt in ast.walk(fn):
+        if isinstance(stmt, ast.Assign) and len(stmt.targets) == 1:
+            tgt = stmt.targets[0]
+            if isinstance(tgt, ast.Name):
+                widths[tgt.id] = _infer_width(stmt.value, widths)
+    return widths
+
+
+@register_rule
+class ShiftDiscardsBits(Rule):
+    id = "FXP002"
+    name = "shift-discards-bits"
+    doc = ("x << k where the inferred width of x plus k exceeds the 32-bit "
+           "lane: high bits are silently dropped.  Carry-tracked shifts must "
+           "carry an allow comment naming where the bits are recovered.")
+
+    @staticmethod
+    def _width_known(node: ast.AST, widths: Dict[str, int]) -> bool:
+        """Only flag shifts whose operand width we actually derived — every
+        bare Name must have an inferred local width (an unresolved name would
+        default to 32 and spray false positives over arbitrary shifts)."""
+        for n in ast.walk(node):
+            if isinstance(n, ast.Name) and n.id not in widths:
+                return False
+        return True
+
+    def check(self, ctx: FileContext) -> Iterator[Finding]:
+        module_widths = _module_const_widths(ctx.tree)
+        for fn in A.func_defs(ctx.tree):
+            widths = _local_widths(fn, module_widths)
+            for node in ast.walk(fn):
+                if not (isinstance(node, ast.BinOp)
+                        and isinstance(node.op, ast.LShift)
+                        and isinstance(node.right, ast.Constant)
+                        and isinstance(node.right.value, int)):
+                    continue
+                if not self._width_known(node.left, widths):
+                    continue
+                w = _infer_width(node.left, widths)
+                k = node.right.value
+                if w + k > 32:
+                    yield self.finding(
+                        ctx, node,
+                        f"left shift by {k} of a ~{w}-bit value exceeds the "
+                        f"32-bit lane; set bits are discarded")
+
+
+@register_rule
+class RawDomainDiscipline(Rule):
+    id = "FXP003"
+    name = "raw-domain-discipline"
+    doc = ("raw*raw multiplication outside QFormat.mul (needs the 16-bit limb "
+           "decomposition), or arithmetic mixing a raw operand with a float "
+           "literal (scale confusion between domains).")
+
+    def check(self, ctx: FileContext) -> Iterator[Finding]:
+        # fixed_point.py itself hosts the blessed helpers
+        blessed_file = ctx.path.endswith("core/fixed_point.py")
+        for fn in A.func_defs(ctx.tree):
+            taint = _RawTaint(fn)
+            blessed_fn = blessed_file or fn.name in (
+                _TO_FLOAT_HELPERS | _RAW_PRODUCERS | {"mul", "add"})
+            for node in ast.walk(fn):
+                if not isinstance(node, ast.BinOp):
+                    continue
+                if isinstance(node.op, ast.Mult) and not blessed_fn:
+                    if taint.is_raw(node.left) and taint.is_raw(node.right):
+                        yield self.finding(
+                            ctx, node,
+                            "raw*raw product outside QFormat.mul — a plain "
+                            "uint32 multiply wraps; use fmt.mul (16-bit limb "
+                            "decomposition) or document exactness")
+                        continue
+                if isinstance(node.op, (ast.Mult, ast.Add, ast.Sub, ast.Div)):
+                    sides = (node.left, node.right)
+                    raw_side = any(taint.is_raw(s) for s in sides)
+                    float_side = any(
+                        isinstance(s, ast.Constant) and isinstance(s.value, float)
+                        for s in sides)
+                    if raw_side and float_side:
+                        yield self.finding(
+                            ctx, node,
+                            "raw-domain operand mixed with a float literal — "
+                            "convert through to_float/from_float instead of "
+                            "mixing scales in one expression")

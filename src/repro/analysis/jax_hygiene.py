@@ -1,0 +1,230 @@
+"""Rule pack 2 — JAX hot-path hygiene (JAX...).
+
+Wave latency is the denominator of every queries/s number this repo reports,
+and one stray host sync inside a step body serializes the whole streaming
+pipeline (the Top-K SpMV and CPU-FPGA codesign papers both call this out).
+These rules police the *hot context*: any function that is jit-compiled —
+``@jax.jit``, ``@jit``, or ``@functools.partial(jax.jit, static_argnames=…)``
+— or explicitly marked with a ``# repro: hot-path`` comment on/above its
+``def``.  Nested ``def``s (scan bodies, closures) inherit the hot context.
+Telemetry and debug code outside marked/jitted functions is exempt by
+construction.
+
+- **JAX101 implicit-sync** — ``.item()`` / ``.tolist()`` / ``float()`` /
+  ``int()`` / ``bool()`` on a traced value inside a hot context: each one
+  blocks until the device catches up.
+- **JAX102 host-numpy-on-traced** — ``np.*`` applied to a traced value:
+  silently pulls the array to host memory.
+- **JAX103 traced-control-flow** — Python ``if``/``while`` on a traced value
+  inside a jit context: either a tracer error or a silent retrace per branch;
+  use ``lax.cond``/``lax.while_loop``/``jnp.where``.
+
+Taint: a jitted function's parameters are traced, **except** names listed in
+``static_argnames``.  ``.shape``/``.dtype``/``.ndim``/``.size`` and ``len()``
+of a traced array are static and clear the taint, as does an ``is None``
+test.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Iterator, List, Optional, Set, Tuple
+
+from . import _astutil as A
+from .core import FileContext, Finding, Rule, register_rule
+
+_STATIC_ATTRS = {"shape", "dtype", "ndim", "size", "nbytes", "weak_type"}
+_SYNC_CASTS = {"float", "int", "bool", "complex"}
+_SYNC_METHODS = {"item", "tolist", "block_until_ready"}
+_NUMPY_ALIASES = {"np", "onp", "numpy"}
+
+
+def _jit_decoration(fn: ast.AST) -> Optional[Tuple[bool, List[str]]]:
+    """(is_jitted, static_argnames) when ``fn`` carries a jit decorator."""
+    for dec in getattr(fn, "decorator_list", []):
+        name = A.dotted_name(dec if not isinstance(dec, ast.Call) else dec.func)
+        if name is None:
+            continue
+        leaf = name.rsplit(".", 1)[-1]
+        if leaf == "jit":
+            return True, []
+        if leaf == "partial" and isinstance(dec, ast.Call):
+            inner = dec.args and A.dotted_name(dec.args[0])
+            if inner and inner.rsplit(".", 1)[-1] == "jit":
+                static: List[str] = []
+                for kw in dec.keywords:
+                    if kw.arg in ("static_argnames", "static_argnums"):
+                        static.extend(A.const_str_tuple(kw.value))
+                return True, static
+    return None
+
+
+def _hot_functions(ctx: FileContext) -> Iterator[Tuple[ast.AST, Set[str], bool]]:
+    """Yield (fn, traced_param_names, jitted) for every hot-context function,
+    including nested defs, which inherit hotness and trace their own params."""
+
+    def emit(fn: ast.AST, jitted: bool, static: List[str]):
+        traced = {p for p in A.param_names(fn)
+                  if p not in static and p not in ("self", "cls")}
+        yield fn, traced, jitted
+        for sub in A.direct_child_defs(fn):
+            sub_dec = _jit_decoration(sub)
+            if sub_dec is not None:
+                continue  # handled by the top-level walk below
+            sub_traced = {p for p in A.param_names(sub) if p not in ("self", "cls")}
+            yield sub, sub_traced, jitted
+
+    for fn in A.func_defs(ctx.tree):
+        dec = _jit_decoration(fn)
+        if dec is not None:
+            yield from emit(fn, True, dec[1])
+        elif ctx.is_marked_hot(fn):
+            yield from emit(fn, False, [])
+
+
+class _TraceTaint:
+    """Forward-pass taint over one function body."""
+
+    def __init__(self, fn: ast.AST, traced_params: Set[str]):
+        self.tainted: Set[str] = set(traced_params)
+        for stmt in ast.walk(fn):
+            if isinstance(stmt, ast.Assign) and len(stmt.targets) == 1:
+                tgt = stmt.targets[0]
+                if isinstance(tgt, ast.Name):
+                    if self.is_tainted(stmt.value):
+                        self.tainted.add(tgt.id)
+                    else:
+                        self.tainted.discard(tgt.id)
+                elif isinstance(tgt, ast.Tuple) and self.is_tainted(stmt.value):
+                    for elt in tgt.elts:
+                        if isinstance(elt, ast.Name):
+                            self.tainted.add(elt.id)
+
+    def is_tainted(self, node: ast.AST) -> bool:
+        if isinstance(node, ast.Name):
+            return node.id in self.tainted
+        if isinstance(node, ast.Attribute):
+            if node.attr in _STATIC_ATTRS:
+                return False
+            return self.is_tainted(node.value)
+        if isinstance(node, ast.Subscript):
+            return self.is_tainted(node.value)
+        if isinstance(node, ast.BinOp):
+            return self.is_tainted(node.left) or self.is_tainted(node.right)
+        if isinstance(node, ast.UnaryOp):
+            return self.is_tainted(node.operand)
+        if isinstance(node, ast.BoolOp):
+            return any(self.is_tainted(v) for v in node.values)
+        if isinstance(node, ast.Compare):
+            # `x is None` / `x is not None` is a static structure test
+            if all(isinstance(op, (ast.Is, ast.IsNot)) for op in node.ops):
+                return False
+            return (self.is_tainted(node.left)
+                    or any(self.is_tainted(c) for c in node.comparators))
+        if isinstance(node, ast.Call):
+            name = A.call_name(node)
+            if name:
+                leaf = name.rsplit(".", 1)[-1]
+                if leaf == "len":
+                    return False  # static under trace
+            if isinstance(node.func, ast.Attribute):
+                if self.is_tainted(node.func.value):
+                    return True
+            return any(self.is_tainted(a) for a in node.args) or any(
+                self.is_tainted(kw.value) for kw in node.keywords)
+        if isinstance(node, (ast.Tuple, ast.List)):
+            return any(self.is_tainted(e) for e in node.elts)
+        if isinstance(node, ast.IfExp):
+            return (self.is_tainted(node.body) or self.is_tainted(node.orelse))
+        return False
+
+
+def _own_nodes(fn: ast.AST) -> Iterator[ast.AST]:
+    """Walk ``fn`` without descending into nested defs (those get their own
+    taint pass)."""
+    stack = list(ast.iter_child_nodes(fn))
+    while stack:
+        node = stack.pop()
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            continue
+        yield node
+        stack.extend(ast.iter_child_nodes(node))
+
+
+@register_rule
+class ImplicitSync(Rule):
+    id = "JAX101"
+    name = "implicit-sync"
+    doc = (".item()/.tolist()/float()/int()/bool() on a traced value inside a "
+           "hot context — a hidden host<->device sync that serializes the "
+           "wave pipeline.")
+
+    def check(self, ctx: FileContext) -> Iterator[Finding]:
+        for fn, traced, _jitted in _hot_functions(ctx):
+            taint = _TraceTaint(fn, traced)
+            for node in _own_nodes(fn):
+                if not isinstance(node, ast.Call):
+                    continue
+                name = A.call_name(node)
+                leaf = name.rsplit(".", 1)[-1] if name else ""
+                if (isinstance(node.func, ast.Name)
+                        and node.func.id in _SYNC_CASTS and node.args
+                        and taint.is_tainted(node.args[0])):
+                    yield self.finding(
+                        ctx, node,
+                        f"{node.func.id}() on a traced value forces a device "
+                        f"sync in the hot path; keep it on device or move it "
+                        f"out of the hot context")
+                elif (isinstance(node.func, ast.Attribute)
+                      and leaf in _SYNC_METHODS
+                      and taint.is_tainted(node.func.value)):
+                    yield self.finding(
+                        ctx, node,
+                        f".{leaf}() on a traced value forces a device sync "
+                        f"in the hot path")
+
+
+@register_rule
+class HostNumpyOnTraced(Rule):
+    id = "JAX102"
+    name = "host-numpy-on-traced"
+    doc = ("np.* applied to a traced value inside a hot context — pulls the "
+           "array to host memory; use jnp.* instead.")
+
+    def check(self, ctx: FileContext) -> Iterator[Finding]:
+        for fn, traced, _jitted in _hot_functions(ctx):
+            taint = _TraceTaint(fn, traced)
+            for node in _own_nodes(fn):
+                if not isinstance(node, ast.Call):
+                    continue
+                name = A.call_name(node)
+                if not name or "." not in name:
+                    continue
+                head = name.split(".", 1)[0]
+                if head in _NUMPY_ALIASES and any(
+                        taint.is_tainted(a) for a in node.args):
+                    yield self.finding(
+                        ctx, node,
+                        f"{name}() on a traced value runs on host — use the "
+                        f"jnp equivalent to stay on device")
+
+
+@register_rule
+class TracedControlFlow(Rule):
+    id = "JAX103"
+    name = "traced-control-flow"
+    doc = ("Python if/while on a traced value inside a jit context — tracer "
+           "error or per-branch retrace; use lax.cond / lax.while_loop / "
+           "jnp.where.")
+
+    def check(self, ctx: FileContext) -> Iterator[Finding]:
+        for fn, traced, jitted in _hot_functions(ctx):
+            if not jitted:
+                continue  # outside jit, Python branching on arrays is legal
+            taint = _TraceTaint(fn, traced)
+            for node in _own_nodes(fn):
+                if isinstance(node, (ast.If, ast.While)) and taint.is_tainted(node.test):
+                    kind = "if" if isinstance(node, ast.If) else "while"
+                    yield self.finding(
+                        ctx, node,
+                        f"Python `{kind}` on a traced value inside jit — use "
+                        f"lax.cond/lax.while_loop/jnp.where")

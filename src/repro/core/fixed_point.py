@@ -106,6 +106,7 @@ class QFormat:
         mid = lh + hl
         mid_carry = (mid < lh).astype(_U32)         # 1 iff wrapped
         # Accumulate low 64 bits as (hi, lo) pair of uint32.
+        # repro: allow[FXP002] carry-tracked — bits >=32 of mid<<16 re-enter via mid>>16 (+ mid_carry) in hi
         lo = ll + (mid << 16)
         carry_lo = (lo < ll).astype(_U32)
         hi = hh + (mid >> 16) + (mid_carry << 16) + carry_lo

@@ -57,6 +57,7 @@ def _fixed_mul_u32(a, b, frac_bits: int):
     hh = a1 * b1
     mid = lh + hl
     mid_carry = (mid < lh).astype(jnp.uint32)
+    # repro: allow[FXP002] carry-tracked — bits >=32 of mid<<16 re-enter via mid>>16 (+ mid_carry) in hi
     lo = ll + (mid << 16)
     carry_lo = (lo < ll).astype(jnp.uint32)
     hi = hh + (mid >> 16) + (mid_carry << 16) + carry_lo

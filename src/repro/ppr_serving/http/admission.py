@@ -141,13 +141,18 @@ class AdmissionController:
             now = getattr(self.service, "time_fn", time.monotonic)()
         recorder.record_event(kind, now, **attrs)
 
-    def admit(self, now: Optional[float] = None) -> Optional[float]:
+    def admit(self, now: Optional[float] = None,
+              graph: Optional[str] = None) -> Optional[float]:
         """Per-arrival decision: ``None`` admits; a float sheds, carrying the
-        ``Retry-After`` hint in seconds."""
+        ``Retry-After`` hint in seconds.  ``graph`` attributes a shed to the
+        graph whose traffic was rejected (the per-graph counter label)."""
         self.tick(now)
         if self.shedding:
             self.shed += 1
-            self.service.telemetry.record_shed()
+            if graph is None:
+                self.service.telemetry.record_shed()
+            else:
+                self.service.telemetry.record_shed(graph=graph)
             return self.config.retry_after_s
         self.admitted += 1
         return None

@@ -11,16 +11,20 @@ controller's shed/degrade/deepen state tracks the queue even when no
 requests are arriving (recovery transitions happen *here*, as the queue
 drains, not on the next arrival).
 
-Wave compute is synchronous JAX and runs inside the tick, blocking the loop
-for the wave's duration — the single-process cost of a no-new-runtime-deps
-tier.  Arrivals buffer in the kernel meanwhile and flood the admission
-controller when the loop resumes, which is exactly the depth spike the
-controller exists to meter.  A process-pool engine offload is the natural
-next step and slots in behind ``service.poll`` without touching this loop.
+Wave compute is synchronous JAX; by default it is offloaded to a dedicated
+single worker thread (``offload=True``), so the event loop keeps admitting,
+shedding, and answering health checks *during* a wave — the ROADMAP item-3
+seam this docstring used to only mark.  One worker means at most one wave
+pipeline runs at a time (JAX dispatch stays serialized, exactly as before);
+``PPRService`` guards its scheduler/cache/controller mutations with an
+internal lock so loop-thread ``submit()`` can interleave with worker-thread
+``poll()``.  ``offload=False`` restores the old in-loop behavior for
+single-threaded debugging.
 """
 from __future__ import annotations
 
 import asyncio
+from concurrent.futures import ThreadPoolExecutor
 from typing import Optional
 
 __all__ = ["WavePump"]
@@ -29,15 +33,18 @@ __all__ = ["WavePump"]
 class WavePump:
     """Owns the poll/tick task; start() is idempotent, stop() flushes."""
 
-    def __init__(self, service, admission=None, interval_s: float = 0.005):
+    def __init__(self, service, admission=None, interval_s: float = 0.005,
+                 offload: bool = True):
         if interval_s <= 0:
             raise ValueError(f"interval_s must be > 0, got {interval_s}")
         self.service = service
         self.admission = admission
         self.interval_s = interval_s
+        self.offload = offload
         self.cycles = 0
         self.waves_launched = 0
         self._task: Optional[asyncio.Task] = None
+        self._executor: Optional[ThreadPoolExecutor] = None
         # mirror the loop counters into the service's metrics registry so
         # /v1/metrics can answer "is the heartbeat alive" without /v1/stats
         registry = getattr(getattr(service, "telemetry", None),
@@ -55,8 +62,21 @@ class WavePump:
     def start(self) -> None:
         if self._task is not None and not self._task.done():
             return
+        if self.offload and self._executor is None:
+            # one worker: waves stay serialized, the stop() flush queues
+            # behind any in-flight poll on the same thread
+            self._executor = ThreadPoolExecutor(
+                max_workers=1, thread_name_prefix="ppr-wave")
         self._task = asyncio.get_running_loop().create_task(
             self._run(), name="ppr-wave-pump")
+
+    async def _drive(self, fn) -> int:
+        """Run one service-driving call (poll/flush) off the loop thread."""
+        if self._executor is None:
+            # repro: allow[ASY303] offload=False is the explicit single-threaded debug mode; blocking is opted into
+            return fn()
+        return await asyncio.get_running_loop().run_in_executor(
+            self._executor, fn)
 
     async def stop(self) -> None:
         """Cancel the heartbeat, then flush: every admitted future resolves
@@ -69,12 +89,15 @@ class WavePump:
             except asyncio.CancelledError:
                 pass
             self._task = None
-        flushed = self.service.flush()
+        flushed = await self._drive(self.service.flush)
         self.waves_launched += flushed
         if self._waves_metric is not None and flushed:
             self._waves_metric.get().inc(flushed)
         if self.admission is not None:
             self.admission.tick()      # record the drained queue / recovery
+        if self._executor is not None:
+            self._executor.shutdown(wait=True)
+            self._executor = None
 
     async def _run(self) -> None:
         while True:
@@ -83,7 +106,7 @@ class WavePump:
                 self._cycles_metric.get().inc()
             if self.admission is not None:
                 self.admission.tick()
-            launched = self.service.poll()
+            launched = await self._drive(self.service.poll)
             self.waves_launched += launched
             if self._waves_metric is not None and launched:
                 self._waves_metric.get().inc(launched)

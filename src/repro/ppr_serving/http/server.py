@@ -120,7 +120,7 @@ class ServingApp:
             return HTTPResponse(400, error_payload(str(e), "bad-request"))
 
         if self.admission is not None:
-            retry_after = self.admission.admit()
+            retry_after = self.admission.admit(graph=spec.graph)
             if retry_after is not None:
                 return HTTPResponse(
                     429,

@@ -36,6 +36,7 @@ quality estimates current (paper Figs. 4-6 measured online).
 from __future__ import annotations
 
 import dataclasses
+import threading
 import time
 import warnings
 from typing import Dict, List, Optional, Sequence, Tuple, Union
@@ -203,6 +204,14 @@ class PPRService:
             self.prefetcher = None
         self._graphs: Dict[str, RegisteredGraph] = {}
         self._wave_counter = 0
+        # Guards the quick mutation sections — scheduler pops/submits, cache,
+        # controller and wave bookkeeping — so the HTTP pump can drive
+        # poll()/flush() on a worker thread while the event-loop thread keeps
+        # calling submit().  Engine compute (the long part of a wave) runs
+        # OUTSIDE the lock; the pump's single worker already serializes waves.
+        # RLock: PPRFuture.result() re-enters through _drive on the same
+        # thread in the synchronous (no-pump) path.
+        self._lock = threading.RLock()
         # last cold (unseeded) iteration count per (graph, precision): the
         # baseline warm_start_iterations_saved is measured against
         self._cold_iters: Dict[Tuple[str, str], int] = {}
@@ -228,6 +237,12 @@ class PPRService:
         new one, which JAX's scatter would silently ignore, serving garbage),
         and resets its quality estimates — nothing from the old topology may
         be served or steer the precision ladder."""
+        with self._lock:  # a registration must not race a worker-thread wave launch
+            return self._register_graph_locked(name, g, formats, packet,
+                                               mesh, mesh_axis, engine)
+
+    def _register_graph_locked(self, name, g, formats, packet, mesh,
+                               mesh_axis, engine) -> RegisteredGraph:
         family = engine if engine is not None else \
             ("sharded" if mesh is not None else "single")
         if family not in engine_families():
@@ -312,6 +327,10 @@ class PPRService:
 
         Returns a report dict (also folded into telemetry): epoch, edge
         counts, scoped-invalidation accounting, apply latency."""
+        with self._lock:  # a delta must not race a worker-thread wave launch
+            return self._apply_delta_locked(name, delta)
+
+    def _apply_delta_locked(self, name: str, delta: EdgeDelta) -> Dict[str, float]:
         if name not in self._graphs:
             raise KeyError(f"graph {name!r} is not registered "
                            f"(have {list(self._graphs)})")
@@ -403,14 +422,15 @@ class PPRService:
         wave shapes, so callers should move in doublings of the base κ."""
         if kappa < 1:
             raise ValueError(f"kappa must be >= 1, got {kappa}")
-        if kappa == self.kappa:
-            return
-        self.telemetry.record_kappa_change(deepened=kappa > self.kappa)
-        self.recorder.record_event(
-            "kappa", self.time_fn(), kappa=kappa,
-            deepened=kappa > self.kappa, previous=self.kappa)
-        self.kappa = kappa
-        self.scheduler.kappa = kappa
+        with self._lock:
+            if kappa == self.kappa:
+                return
+            self.telemetry.record_kappa_change(deepened=kappa > self.kappa)
+            self.recorder.record_event(
+                "kappa", self.time_fn(), kappa=kappa,
+                deepened=kappa > self.kappa, previous=self.kappa)
+            self.kappa = kappa
+            self.scheduler.kappa = kappa
 
     def degrade_quality(self, target: float) -> None:
         """Impose the SLO-degradation ceiling: until ``restore_quality``,
@@ -418,21 +438,23 @@ class PPRService:
         ``min(its target, target)`` — serving 0.93 instead of 0.95 when the
         admission queue is deep buys wave latency at a measured, recorded
         quality cost (each capped resolution counts in telemetry)."""
-        if self.controller.target_ceiling == float(target):
-            return
-        self.controller.set_target_ceiling(target)
-        self.telemetry.record_slo_transition(degraded=True)
-        self.recorder.record_event("slo_degrade", self.time_fn(),
-                                   target=float(target))
+        with self._lock:
+            if self.controller.target_ceiling == float(target):
+                return
+            self.controller.set_target_ceiling(target)
+            self.telemetry.record_slo_transition(degraded=True)
+            self.recorder.record_event("slo_degrade", self.time_fn(),
+                                       target=float(target))
 
     def restore_quality(self) -> None:
         """Lift the degradation ceiling (queue drained) — auto traffic
         resumes its requested quality targets."""
-        if self.controller.target_ceiling is None:
-            return
-        self.controller.set_target_ceiling(None)
-        self.telemetry.record_slo_transition(degraded=False)
-        self.recorder.record_event("slo_recover", self.time_fn())
+        with self._lock:
+            if self.controller.target_ceiling is None:
+                return
+            self.controller.set_target_ceiling(None)
+            self.telemetry.record_slo_transition(degraded=False)
+            self.recorder.record_event("slo_recover", self.time_fn())
 
     # ------------------------------------------------------------------
     def _resolve_precision(self, q: PPRQuery) -> str:
@@ -444,19 +466,24 @@ class PPRService:
                              if q.quality_target is None
                              else float(q.quality_target))
                 if ceiling < requested:
-                    self.telemetry.record_degraded_query()
+                    self.telemetry.record_degraded_query(graph=q.graph)
             fmt = self.controller.resolve(q.graph, q.quality_target)
             pkey = FLOAT_KEY if fmt is None else fmt.name
             self.telemetry.record_auto_resolution(pkey)
             return pkey
         return precision_key(q.precision)
 
-    def _cache_key(self, q: PPRQuery, pkey: str) -> Tuple:
+    def _cache_key(self, q: PPRQuery, pkey: str,
+                   epoch: Optional[int] = None) -> Tuple:
         # graph epoch + resolved precision + iteration budget + early-exit +
         # warm-start mode: a result computed on an older topology or under
         # different numerics must never alias a current entry.  Scoped delta
         # invalidation relies on this layout (epoch at [1], vertex at [2]).
-        epoch = getattr(self._graphs.get(q.graph), "epoch", 0)
+        # Wave resolution passes the wave's own epoch explicitly: with the
+        # pump offload a delta can land mid-wave, and reading the *current*
+        # epoch here would file the stale wave's results under the new one.
+        if epoch is None:
+            epoch = getattr(self._graphs.get(q.graph), "epoch", 0)
         return (q.graph, epoch, int(q.vertex), pkey,
                 int(q.k), int(self.iterations), self.convergence is not None,
                 self._warm is not None)
@@ -491,44 +518,46 @@ class PPRService:
                 f"k={q.k} exceeds the {rg.num_vertices - 1} recommendable "
                 f"vertices of {q.graph!r} (|V|={rg.num_vertices}, the query "
                 f"vertex excludes itself)")
-        tracer = self.tracer
-        tr = None
-        if tracer is not None:
-            tr = tracer.start("query", "query", graph=q.graph,
-                              vertex=int(q.vertex), k=int(q.k),
-                              requested=str(q.precision))
-            sp = tr.span("resolve_precision", self.time_fn())
-        pkey = self._resolve_precision(q)
-        if tr is not None:
-            sp.end(self.time_fn(), precision=pkey)
-        self.telemetry.record_query_vertex(q.graph, int(q.vertex),
-                                           k=q.k, pkey=pkey)
-        fut = PPRFuture(q, self)
-        if tr is not None:
-            fut._trace = tr
-            sp = tr.span("cache_probe", self.time_fn())
-        hit = self.cache.get(self._cache_key(q, pkey))
-        self.telemetry.record_cache(hit is not None)
-        if tr is not None:
-            sp.end(self.time_fn(), hit=hit is not None)
-        if hit is not None:
-            verts, scores = hit
-            fut._resolve(Recommendation(q, verts.copy(), scores.copy(),
-                                        source="cache", precision=pkey))
+        with self._lock:
+            tracer = self.tracer
+            tr = None
+            if tracer is not None:
+                tr = tracer.start("query", "query", graph=q.graph,
+                                  vertex=int(q.vertex), k=int(q.k),
+                                  requested=str(q.precision))
+                sp = tr.span("resolve_precision", self.time_fn())
+            pkey = self._resolve_precision(q)
             if tr is not None:
-                tracer.finish(tr, outcome="resolved", source="cache",
-                              precision=pkey)
-                fut._trace = None
+                sp.end(self.time_fn(), precision=pkey)
+            self.telemetry.record_query_vertex(q.graph, int(q.vertex),
+                                               k=q.k, pkey=pkey)
+            fut = PPRFuture(q, self)
+            if tr is not None:
+                fut._trace = tr
+                sp = tr.span("cache_probe", self.time_fn())
+            hit = self.cache.get(self._cache_key(q, pkey))
+            self.telemetry.record_cache(hit is not None)
+            if tr is not None:
+                sp.end(self.time_fn(), hit=hit is not None)
+            if hit is not None:
+                verts, scores = hit
+                fut._resolve(Recommendation(q, verts.copy(), scores.copy(),
+                                            source="cache", precision=pkey))
+                if tr is not None:
+                    tracer.finish(tr, outcome="resolved", source="cache",
+                                  precision=pkey)
+                    fut._trace = None
+                return fut
+            key = (q.graph, pkey, rg.mesh_key, rg.epoch)
+            fut._wave_key = key
+            now = self.time_fn()
+            self.scheduler.submit(key, fut, deadline=q.deadline, now=now)
+            # gauge at *submit* time, not just on control ticks: a burst's
+            # peak depth between ticks used to be invisible in
+            # queue_depth_peak
+            self.telemetry.record_queue_depth(self.scheduler.queue_depth(),
+                                              self.scheduler.oldest_wait_s(now))
             return fut
-        key = (q.graph, pkey, rg.mesh_key, rg.epoch)
-        fut._wave_key = key
-        now = self.time_fn()
-        self.scheduler.submit(key, fut, deadline=q.deadline, now=now)
-        # gauge at *submit* time, not just on control ticks: a burst's peak
-        # depth between ticks used to be invisible in queue_depth_peak
-        self.telemetry.record_queue_depth(self.scheduler.queue_depth(),
-                                          self.scheduler.oldest_wait_s(now))
-        return fut
 
     def poll(self, now: Optional[float] = None) -> int:
         """Launch every wave the admission policy considers ready; resolved
@@ -555,8 +584,10 @@ class PPRService:
         """Launch everything pending regardless of occupancy (end-of-batch /
         shutdown path); every pending future resolves.  Returns the number of
         waves launched."""
+        with self._lock:
+            popped = self.scheduler.drain()
         waves = 0
-        for wave in self.scheduler.drain():
+        for wave in popped:
             self._run_wave(wave)
             waves += 1
         return waves
@@ -569,14 +600,18 @@ class PPRService:
             return
         key = fut._wave_key
         if key is not None:
-            for wave in self.scheduler.flush_keys({key}):
+            with self._lock:
+                popped = self.scheduler.flush_keys({key})
+            for wave in popped:
                 self._run_wave(wave)
 
     def _launch_ready(self, now: Optional[float],
                       allow_prefetch: bool) -> Tuple[int, List[Recommendation]]:
         recs: List[Recommendation] = []
         waves = 0
-        for wave in self.scheduler.ready_waves(now=now):
+        with self._lock:
+            popped = self.scheduler.ready_waves(now=now)
+        for wave in popped:
             recs.extend(self._run_wave(wave))
             waves += 1
         if not waves and allow_prefetch and self.prefetcher is not None:
@@ -618,7 +653,9 @@ class PPRService:
         returned as a list."""
         _deprecated("drain", "flush() + PPRFuture.result()")
         recs: List[Recommendation] = []
-        for wave in self.scheduler.drain():
+        with self._lock:
+            popped = self.scheduler.drain()
+        for wave in popped:
             recs.extend(self._run_wave(wave))
         return [r for r in recs if not r.query.prefetch]
 
@@ -630,42 +667,45 @@ class PPRService:
         real (k, resolved precision) when known — auto traffic records its
         post-resolution format, so that matches what the controller would
         resolve next — else the config's k at the controller's current rung."""
-        cfg = self.prefetcher.config
-        now_s = self.time_fn() if now is None else now
-        keys = set()
-        issued = 0
-        for name, rg in self._graphs.items():
-            if issued >= cfg.max_per_pump:
-                break
-            counts = self.telemetry.query_vertex_counts.get(name, {})
-            last = self.telemetry.query_vertex_last.get(name, {})
-            self.prefetcher.decay_demand(name, counts, now=now_s,
-                                         last_seen=last)
-            for v in self.prefetcher.candidates(name, counts,
-                                                cfg.max_per_pump - issued):
-                if not 0 <= v < rg.num_vertices:
-                    continue                  # stale demand from a dead topology
-                k_v, pkey = last.get(v, (cfg.k, None))
-                if pkey is None:
-                    fmt = self.controller.resolve(name)
-                    pkey = FLOAT_KEY if fmt is None else fmt.name
-                q = PPRQuery(name, int(v), k=min(k_v, rg.num_vertices - 1),
-                             precision=pkey, prefetch=True)
-                if self._cache_key(q, pkey) in self.cache:
-                    continue                  # membership probe: counter-free
-                key = (name, pkey, rg.mesh_key, rg.epoch)
-                fut = PPRFuture(q, self)
-                fut._wave_key = key
-                self.scheduler.submit(key, fut, now=now)
-                keys.add(key)
-                issued += 1
-        if not issued:
-            return 0, []
-        self.prefetcher.issued += issued
-        self.telemetry.record_prefetch(issued)
+        with self._lock:
+            cfg = self.prefetcher.config
+            now_s = self.time_fn() if now is None else now
+            keys = set()
+            issued = 0
+            for name, rg in self._graphs.items():
+                if issued >= cfg.max_per_pump:
+                    break
+                counts = self.telemetry.query_vertex_counts.get(name, {})
+                last = self.telemetry.query_vertex_last.get(name, {})
+                self.prefetcher.decay_demand(name, counts, now=now_s,
+                                             last_seen=last)
+                for v in self.prefetcher.candidates(name, counts,
+                                                    cfg.max_per_pump - issued):
+                    if not 0 <= v < rg.num_vertices:
+                        continue              # stale demand from a dead topology
+                    k_v, pkey = last.get(v, (cfg.k, None))
+                    if pkey is None:
+                        fmt = self.controller.resolve(name)
+                        pkey = FLOAT_KEY if fmt is None else fmt.name
+                    q = PPRQuery(name, int(v),
+                                 k=min(k_v, rg.num_vertices - 1),
+                                 precision=pkey, prefetch=True)
+                    if self._cache_key(q, pkey) in self.cache:
+                        continue              # membership probe: counter-free
+                    key = (name, pkey, rg.mesh_key, rg.epoch)
+                    fut = PPRFuture(q, self)
+                    fut._wave_key = key
+                    self.scheduler.submit(key, fut, now=now)
+                    keys.add(key)
+                    issued += 1
+            if not issued:
+                return 0, []
+            self.prefetcher.issued += issued
+            self.telemetry.record_prefetch(issued)
+            popped = self.scheduler.flush_keys(keys)
         recs: List[Recommendation] = []
         waves = 0
-        for wave in self.scheduler.flush_keys(keys):
+        for wave in popped:
             recs.extend(self._run_wave(wave))
             waves += 1
         return waves, recs
@@ -791,18 +831,42 @@ class PPRService:
         latency = t_topk - t0
 
         recs = []
+        # the cache fill + counters are the wave's shared-state tail: take the
+        # service lock so a concurrent loop-thread submit() sees either no
+        # entry or a complete one (engine compute above ran unlocked — that is
+        # the whole point of the pump offload)
+        with self._lock:
+            for col, fut in enumerate(wave.items):
+                q = fut.query
+                v_top = idx[col, : q.k].copy()
+                s_top = scores[col, : q.k].copy()
+                # the cache keeps its own copies: callers may mutate their
+                # Recommendation arrays without poisoning later hits
+                self.cache.put(self._cache_key(q, pkey, epoch=_epoch),
+                               (v_top.copy(), s_top.copy()))
+                recs.append(Recommendation(q, v_top, s_top, source="wave",
+                                           wave_id=wave_id, latency_s=latency,
+                                           precision=pkey))
+            t_resolve = self.time_fn()
+            self.telemetry.record_stage("resolve", t_resolve - t_topk)
+            self.telemetry.record_wave(len(wave.items), self.kappa, latency,
+                                       pkey, mesh_key=mesh_key,
+                                       engine=plan.engine, graph=graph_name)
+        self._shadow_feedback(wave, rg, fmt, pkey, P)
+        if wtr is not None:
+            wtr.span("plan", t0).end(t_plan, engine=plan.engine)
+            wtr.span("warm_start", t_plan).end(
+                t_warm, warm_cols=warm_cols, iterations_saved=warm_saved)
+            wtr.span("iterate", t_warm).end(t_iter, **iterate_info)
+            wtr.span("topk", t_iter).end(t_topk, k_max=k_max)
+            wtr.span("resolve", t_topk).end(t_resolve)
+            tracer.finish(wtr, latency_s=latency, engine=plan.engine)
+        # resolve futures LAST: with the pump offload a waiter wakes the
+        # moment its future resolves (the loop-thread bridge), and must then
+        # observe the wave's *completed* accounting — counters, traces and
+        # cache fills all land before any caller can see the result
         for col, fut in enumerate(wave.items):
-            q = fut.query
-            v_top = idx[col, : q.k].copy()
-            s_top = scores[col, : q.k].copy()
-            # the cache keeps its own copies: callers may mutate their
-            # Recommendation arrays without poisoning later hits
-            self.cache.put(self._cache_key(q, pkey), (v_top.copy(), s_top.copy()))
-            rec = Recommendation(q, v_top, s_top, source="wave",
-                                 wave_id=wave_id, latency_s=latency,
-                                 precision=pkey)
-            fut._resolve(rec)
-            recs.append(rec)
+            fut._resolve(recs[col])
             if tracer is not None and fut._trace is not None:
                 tr = fut._trace
                 enq = (wave.enqueued_at[col]
@@ -815,19 +879,6 @@ class PPRService:
                               precision=pkey,
                               wave_trace=wtr.trace_id if wtr else None)
                 fut._trace = None
-        t_resolve = self.time_fn()
-        self.telemetry.record_stage("resolve", t_resolve - t_topk)
-        self.telemetry.record_wave(len(wave.items), self.kappa, latency, pkey,
-                                   mesh_key=mesh_key, engine=plan.engine)
-        self._shadow_feedback(wave, rg, fmt, pkey, P)
-        if wtr is not None:
-            wtr.span("plan", t0).end(t_plan, engine=plan.engine)
-            wtr.span("warm_start", t_plan).end(
-                t_warm, warm_cols=warm_cols, iterations_saved=warm_saved)
-            wtr.span("iterate", t_warm).end(t_iter, **iterate_info)
-            wtr.span("topk", t_iter).end(t_topk, k_max=k_max)
-            wtr.span("resolve", t_topk).end(t_resolve)
-            tracer.finish(wtr, latency_s=latency, engine=plan.engine)
         return recs
 
     # ------------------------------------------------------------------
@@ -858,10 +909,11 @@ class PPRService:
         if not sampled:
             return
         if fmt is None:
-            for _, q in sampled:
-                self.controller.observe_quality(rg.name, FLOAT_KEY, 1.0,
-                                                target=q.quality_target)
-                self.telemetry.record_shadow(1.0)
+            with self._lock:   # controller state is shared with submit-time resolution
+                for _, q in sampled:
+                    self.controller.observe_quality(rg.name, FLOAT_KEY, 1.0,
+                                                    target=q.quality_target)
+                    self.telemetry.record_shadow(1.0)
             return
         pers_sub = jnp.asarray(
             np.asarray([int(q.vertex) for _, q in sampled], np.int32))
@@ -878,9 +930,10 @@ class PPRService:
             P_ref = ref_plan.step(Vref, P_ref)
         ref = np.asarray(P_ref, np.float64)
         approx = np.asarray(P, np.float64) / fmt.scale
-        for j, (col, q) in enumerate(sampled):
-            ref_col = ref[:, j]
-            score = self.controller.observe_shadow(
-                rg.name, pkey, approx[:, col], ref_col,
-                target=q.quality_target, ref_order=ranking(ref_col))
-            self.telemetry.record_shadow(score)
+        with self._lock:   # the reference compute above ran unlocked
+            for j, (col, q) in enumerate(sampled):
+                ref_col = ref[:, j]
+                score = self.controller.observe_shadow(
+                    rg.name, pkey, approx[:, col], ref_col,
+                    target=q.quality_target, ref_order=ranking(ref_col))
+                self.telemetry.record_shadow(score)

@@ -76,8 +76,11 @@ class ServiceTelemetry:
         r = self.registry = MetricsRegistry(reservoir_size=self.reservoir_size)
         # -- waves / queries / cache ----------------------------------------
         self._waves = r.counter("ppr_waves_total", "Waves launched.")
+        # graph-labeled: on a shared instance, one graph's overload must be
+        # attributable (pairs with per-graph admission, ROADMAP item 3)
         self._queries = r.counter("ppr_queries_served_total",
-                                  "Queries resolved by waves.")
+                                  "Queries resolved by waves, per graph.",
+                                  labels=("graph",))
         self._cache_hits = r.counter("ppr_cache_hits_total",
                                      "Submit-path result-cache hits.")
         self._cache_misses = r.counter("ppr_cache_misses_total",
@@ -174,7 +177,9 @@ class ServiceTelemetry:
             "ppr_oldest_wait_seconds",
             "Age of the longest-waiting pending query.")
         self._queries_shed = r.counter(
-            "ppr_queries_shed_total", "Arrivals rejected by admission (429).")
+            "ppr_queries_shed_total",
+            "Arrivals rejected by admission (429), per graph.",
+            labels=("graph",))
         self._shed_engaged = r.counter("ppr_shed_engaged_total",
                                        "High-water crossings (entering shed).")
         self._shed_recovered = r.counter("ppr_shed_recovered_total",
@@ -185,7 +190,8 @@ class ServiceTelemetry:
                                       "Quality-target ceiling lifted.")
         self._slo_degraded_queries = r.counter(
             "ppr_slo_degraded_queries_total",
-            "Auto queries resolved under a ceiling.")
+            "Auto queries resolved under a ceiling, per graph.",
+            labels=("graph",))
         self._kappa_deepen = r.counter("ppr_kappa_deepen_total",
                                        "Wave depth deepened under load.")
         self._kappa_relax = r.counter("ppr_kappa_relax_total",
@@ -199,9 +205,13 @@ class ServiceTelemetry:
         self.query_vertex_last: Dict[str, Dict[int, Tuple[int, str]]] = {}
 
     # ------------------------------------------------------------------
+    #: label value when a caller cannot attribute an event to a graph
+    UNATTRIBUTED = "unknown"
+
     def record_wave(self, n_queries: int, kappa: int, latency_s: float,
                     precision: str, mesh_key: str = SINGLE_DEVICE_KEY,
-                    engine: Optional[str] = None) -> None:
+                    engine: Optional[str] = None,
+                    graph: str = UNATTRIBUTED) -> None:
         if engine is not None:
             self._engine_latency.labels(engine=engine).observe(latency_s)
             self._engine_latency_q.labels(engine=engine).add(latency_s)
@@ -212,7 +222,7 @@ class ServiceTelemetry:
         self._occupancy.get().observe(occ)
         self._occupancy_q.get().add(occ)
         self._wave_precisions.append(precision)
-        self._queries.get().inc(n_queries)
+        self._queries.labels(graph=graph).inc(n_queries)
         self._served_by_precision.labels(precision=precision).inc(n_queries)
         self._waves_by_mesh.labels(mesh=mesh_key).inc()
         self._queries_by_mesh.labels(mesh=mesh_key).inc(n_queries)
@@ -317,9 +327,9 @@ class ServiceTelemetry:
         self._queue_depth.get().set(int(depth))
         self._oldest_wait.get().set(float(oldest_wait_s))
 
-    def record_shed(self) -> None:
+    def record_shed(self, graph: str = UNATTRIBUTED) -> None:
         """One arriving query rejected by admission control (HTTP 429)."""
-        self._queries_shed.get().inc()
+        self._queries_shed.labels(graph=graph).inc()
 
     def record_shed_transition(self, engaged: bool) -> None:
         """Load shedding switched on (high-water crossed) or off (drained
@@ -331,9 +341,9 @@ class ServiceTelemetry:
         ceiling on ``precision="auto"`` resolution."""
         (self._slo_degrade if degraded else self._slo_recover).get().inc()
 
-    def record_degraded_query(self) -> None:
+    def record_degraded_query(self, graph: str = UNATTRIBUTED) -> None:
         """One auto query resolved against a stepped-down quality target."""
-        self._slo_degraded_queries.get().inc()
+        self._slo_degraded_queries.labels(graph=graph).inc()
 
     def record_kappa_change(self, deepened: bool) -> None:
         """Backpressure batching moved the wave depth: deepened under load,
@@ -348,13 +358,23 @@ class ServiceTelemetry:
         return {labels[0][1]: cast(inst.value)
                 for labels, inst in family.series()}
 
+    @staticmethod
+    def _family_total(family) -> int:
+        """Sum across a labeled family's series — the legacy scalar view of a
+        now-per-graph counter (a family with no series yet totals 0)."""
+        return int(sum(inst.value for _, inst in family.series()))
+
     @property
     def waves(self) -> int:
         return int(self._waves.get().value)
 
     @property
     def queries_served(self) -> int:
-        return int(self._queries.get().value)
+        return self._family_total(self._queries)
+
+    @property
+    def queries_served_by_graph(self) -> Dict[str, int]:
+        return self._labeled(self._queries)
 
     @property
     def cache_hits(self) -> int:
@@ -473,7 +493,11 @@ class ServiceTelemetry:
 
     @property
     def queries_shed(self) -> int:
-        return int(self._queries_shed.get().value)
+        return self._family_total(self._queries_shed)
+
+    @property
+    def queries_shed_by_graph(self) -> Dict[str, int]:
+        return self._labeled(self._queries_shed)
 
     @property
     def shed_engaged_events(self) -> int:
@@ -493,7 +517,11 @@ class ServiceTelemetry:
 
     @property
     def slo_degraded_queries(self) -> int:
-        return int(self._slo_degraded_queries.get().value)
+        return self._family_total(self._slo_degraded_queries)
+
+    @property
+    def slo_degraded_queries_by_graph(self) -> Dict[str, int]:
+        return self._labeled(self._slo_degraded_queries)
 
     @property
     def kappa_deepen_events(self) -> int:

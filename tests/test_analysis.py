@@ -1,0 +1,376 @@
+"""repro.analysis: per-rule firing + non-firing fixtures for all three packs
+(FXP fixed-point width safety, JAX hot-path hygiene, ASY async-serving
+discipline), the inline suppression contract (reasoned allow suppresses,
+bare allow is itself a finding), baseline round-trip (write -> check passes,
+fix -> stale entry fails --check), and the CLI surface (exit codes, --json
+report, --list-rules)."""
+import json
+import textwrap
+
+import pytest
+
+from repro.analysis.cli import main as cli_main
+from repro.analysis.core import all_rules, analyze_paths, get_rule
+
+
+def run(tmp_path, source, rule_id=None, name="mod.py"):
+    """Analyze one dedented source string; optionally restrict to one rule."""
+    f = tmp_path / name
+    f.write_text(textwrap.dedent(source))
+    rules = None if rule_id is None else [get_rule(rule_id)]
+    return analyze_paths([str(f)], str(tmp_path), rules=rules)
+
+
+def rule_ids(result):
+    return [f.rule_id for f in result.findings]
+
+
+# ---------------------------------------------------------------------------
+# FXP pack — fixed-point width safety
+# ---------------------------------------------------------------------------
+def test_fxp001_fires_on_unguarded_raw_accumulation(tmp_path):
+    r = run(tmp_path, """
+        def accumulate(raw_vals, seg):
+            return segment_sum(raw_vals, seg)
+    """, "FXP001")
+    assert rule_ids(r) == ["FXP001"]
+
+
+def test_fxp001_quiet_with_width_guard(tmp_path):
+    r = run(tmp_path, """
+        def accumulate(raw_vals, seg, raw_acc):
+            a = segment_sum(raw_vals.astype(jnp.int64), seg)
+            b = raw_acc.astype(jnp.int32).sum(0)
+            return a + b
+    """, "FXP001")
+    assert rule_ids(r) == []
+
+
+def test_fxp001_fires_on_raw_dot_sum(tmp_path):
+    r = run(tmp_path, """
+        def total(raw_acc):
+            return raw_acc.sum(0)
+    """, "FXP001")
+    assert rule_ids(r) == ["FXP001"]
+
+
+def test_fxp002_fires_when_shift_exceeds_lane(tmp_path):
+    r = run(tmp_path, """
+        def pack():
+            x = 0x3FFFFFF
+            return x << 10
+    """, "FXP002")
+    assert rule_ids(r) == ["FXP002"]
+    assert "exceeds the 32-bit lane" in r.findings[0].message
+
+
+def test_fxp002_quiet_when_shift_fits_or_width_unknown(tmp_path):
+    r = run(tmp_path, """
+        def fits():
+            x = 0x3FFFFFF
+            return x << 4
+
+        def unknown_operand(y):
+            return y << 30
+    """, "FXP002")
+    # 26+4 fits; y's width is unresolved so the rule must stay silent rather
+    # than assume full width and spray false positives
+    assert rule_ids(r) == []
+
+
+def test_fxp002_seeds_module_level_masks(tmp_path):
+    r = run(tmp_path, """
+        _MASK16 = np.uint32(0xFFFF)
+
+        def lift():
+            return _MASK16 << 20
+    """, "FXP002")
+    assert rule_ids(r) == ["FXP002"]
+
+
+def test_fxp003_fires_on_raw_times_raw_outside_mul(tmp_path):
+    r = run(tmp_path, """
+        def combine(a_raw, b_raw):
+            return a_raw * b_raw
+    """, "FXP003")
+    assert rule_ids(r) == ["FXP003"]
+
+
+def test_fxp003_quiet_inside_blessed_helpers(tmp_path):
+    r = run(tmp_path, """
+        def mul(a_raw, b_raw):
+            return a_raw * b_raw
+    """, "FXP003")
+    assert rule_ids(r) == []
+
+
+def test_fxp003_fires_on_raw_float_literal_mix(tmp_path):
+    r = run(tmp_path, """
+        def scale(x_raw):
+            return x_raw * 0.5
+    """, "FXP003")
+    assert rule_ids(r) == ["FXP003"]
+    clean = run(tmp_path, """
+        def scale(x):
+            return x * 0.5
+    """, "FXP003", name="clean.py")
+    assert rule_ids(clean) == []
+
+
+# ---------------------------------------------------------------------------
+# JAX pack — hot-path hygiene
+# ---------------------------------------------------------------------------
+def test_jax101_fires_on_sync_cast_in_jit(tmp_path):
+    r = run(tmp_path, """
+        @jax.jit
+        def step(x):
+            return float(x)
+    """, "JAX101")
+    assert rule_ids(r) == ["JAX101"]
+
+
+def test_jax101_static_shapes_and_argnames_are_exempt(tmp_path):
+    r = run(tmp_path, """
+        @functools.partial(jax.jit, static_argnames=("n",))
+        def step(x, n):
+            rows = float(x.shape[0])
+            return x * (rows + int(n))
+    """, "JAX101")
+    assert rule_ids(r) == []
+
+
+def test_jax101_hot_path_marker_arms_unjitted_functions(tmp_path):
+    r = run(tmp_path, """
+        # repro: hot-path
+        def step(x):
+            return x.item()
+    """, "JAX101")
+    assert rule_ids(r) == ["JAX101"]
+
+
+def test_jax102_fires_on_host_numpy_over_traced(tmp_path):
+    r = run(tmp_path, """
+        @jax.jit
+        def rank(x):
+            return np.argsort(x)
+    """, "JAX102")
+    assert rule_ids(r) == ["JAX102"]
+    clean = run(tmp_path, """
+        @jax.jit
+        def rank(x):
+            return jnp.argsort(x)
+    """, "JAX102", name="clean.py")
+    assert rule_ids(clean) == []
+
+
+def test_jax103_fires_only_inside_actual_jit(tmp_path):
+    r = run(tmp_path, """
+        @jax.jit
+        def clamp(x):
+            if x > 0:
+                return x
+            return -x
+    """, "JAX103")
+    assert rule_ids(r) == ["JAX103"]
+    # marked-hot but unjitted: Python branching on arrays is legal there
+    marked = run(tmp_path, """
+        # repro: hot-path
+        def clamp(x):
+            if x > 0:
+                return x
+            return -x
+    """, "JAX103", name="marked.py")
+    assert rule_ids(marked) == []
+
+
+def test_jax103_is_none_test_is_static(tmp_path):
+    r = run(tmp_path, """
+        @jax.jit
+        def seed(x, warm):
+            if warm is None:
+                return x
+            return warm
+    """, "JAX103")
+    assert rule_ids(r) == []
+
+
+# ---------------------------------------------------------------------------
+# ASY pack — async-serving discipline
+# ---------------------------------------------------------------------------
+def test_asy301_fires_on_time_sleep_in_async(tmp_path):
+    r = run(tmp_path, """
+        import time
+
+        async def tick():
+            time.sleep(0.1)
+    """, "ASY301")
+    assert rule_ids(r) == ["ASY301"]
+
+
+def test_asy301_quiet_on_awaited_sleep_and_sync_defs(tmp_path):
+    r = run(tmp_path, """
+        import asyncio, time
+
+        async def tick():
+            await asyncio.sleep(0.1)
+
+        def sync_retry():
+            time.sleep(0.1)
+    """, "ASY301")
+    assert rule_ids(r) == []
+
+
+def test_asy302_fires_on_untimed_result_in_async(tmp_path):
+    r = run(tmp_path, """
+        async def handler(fut):
+            return fut.result()
+    """, "ASY302")
+    assert rule_ids(r) == ["ASY302"]
+    probe = run(tmp_path, """
+        async def handler(fut):
+            return fut.result(timeout=0)
+    """, "ASY302", name="probe.py")
+    assert rule_ids(probe) == []
+
+
+def test_asy303_fires_on_direct_service_drive(tmp_path):
+    r = run(tmp_path, """
+        async def run(self):
+            self.service.poll()
+    """, "ASY303")
+    assert rule_ids(r) == ["ASY303"]
+
+
+def test_asy303_quiet_when_offloaded(tmp_path):
+    r = run(tmp_path, """
+        async def run(self, loop, ex):
+            return await loop.run_in_executor(ex, self.service.poll)
+    """, "ASY303")
+    assert rule_ids(r) == []
+
+
+def test_asy304_fires_on_discarded_submit(tmp_path):
+    r = run(tmp_path, """
+        async def handle(svc, q):
+            svc.submit(q)
+    """, "ASY304")
+    assert rule_ids(r) == ["ASY304"]
+    held = run(tmp_path, """
+        async def handle(svc, q):
+            fut = svc.submit(q)
+            return fut
+    """, "ASY304", name="held.py")
+    assert rule_ids(held) == []
+
+
+# ---------------------------------------------------------------------------
+# suppression contract
+# ---------------------------------------------------------------------------
+def test_reasoned_allow_suppresses_same_line(tmp_path):
+    r = run(tmp_path, """
+        def combine(a_raw, b_raw):
+            return a_raw * b_raw  # repro: allow[FXP003] exactness proven in tests
+    """)
+    assert rule_ids(r) == []
+    assert r.suppressed == 1
+
+
+def test_reasoned_allow_on_own_line_covers_next_line(tmp_path):
+    r = run(tmp_path, """
+        def combine(a_raw, b_raw):
+            # repro: allow[FXP003] exactness proven in tests
+            return a_raw * b_raw
+    """)
+    assert rule_ids(r) == []
+    assert r.suppressed == 1
+
+
+def test_bare_allow_is_itself_a_finding_and_suppresses_nothing(tmp_path):
+    r = run(tmp_path, """
+        def combine(a_raw, b_raw):
+            return a_raw * b_raw  # repro: allow[FXP003]
+    """)
+    assert sorted(rule_ids(r)) == ["FXP003", "SUP000"]
+    assert r.suppressed == 0
+
+
+def test_allow_for_wrong_rule_does_not_suppress(tmp_path):
+    r = run(tmp_path, """
+        def combine(a_raw, b_raw):
+            return a_raw * b_raw  # repro: allow[FXP001] not the rule that fires
+    """)
+    assert rule_ids(r) == ["FXP003"]
+    assert r.suppressed == 0
+
+
+# ---------------------------------------------------------------------------
+# baseline round-trip + CLI surface
+# ---------------------------------------------------------------------------
+VIOLATION = "def combine(a_raw, b_raw):\n    return a_raw * b_raw\n"
+CLEAN = "def combine(a, b):\n    return a * b\n"
+
+
+def test_baseline_round_trip(tmp_path, capsys):
+    mod = tmp_path / "mod.py"
+    mod.write_text(VIOLATION)
+    root = str(tmp_path)
+
+    # no baseline yet: the finding fails the run
+    assert cli_main([str(mod), "--root", root]) == 1
+
+    # record it, then the same tree passes --check
+    assert cli_main([str(mod), "--root", root, "--write-baseline"]) == 0
+    assert (tmp_path / "ANALYSIS_baseline.json").exists()
+    assert cli_main([str(mod), "--root", root, "--check"]) == 0
+
+    # a NEW violation (same rule, same message — multiset budget) still fails
+    mod.write_text(VIOLATION + "\n\ndef again(c_raw, d_raw):\n"
+                   "    return c_raw * d_raw\n")
+    assert cli_main([str(mod), "--root", root, "--check"]) == 1
+
+    # fixing everything leaves a stale ledger entry: --check fails (the
+    # ledger only shrinks), a plain run passes
+    mod.write_text(CLEAN)
+    assert cli_main([str(mod), "--root", root]) == 0
+    assert cli_main([str(mod), "--root", root, "--check"]) == 1
+    out = capsys.readouterr().out
+    assert "stale baseline entry" in out
+
+
+def test_cli_json_report(tmp_path):
+    mod = tmp_path / "mod.py"
+    mod.write_text(VIOLATION)
+    report = tmp_path / "report.json"
+    rc = cli_main([str(mod), "--root", str(tmp_path),
+                   "--json", str(report)])
+    assert rc == 1
+    payload = json.loads(report.read_text())
+    assert payload["version"] == 1
+    assert payload["files_scanned"] == 1
+    assert payload["baselined"] == 0
+    assert [f["rule"] for f in payload["findings"]] == ["FXP003"]
+    f = payload["findings"][0]
+    assert f["path"] == "mod.py" and f["line"] == 2
+
+
+def test_cli_list_rules_prints_full_catalogue(capsys):
+    assert cli_main(["--list-rules"]) == 0
+    out = capsys.readouterr().out
+    for rid in ("FXP001", "FXP002", "FXP003", "JAX101", "JAX102", "JAX103",
+                "ASY301", "ASY302", "ASY303", "ASY304"):
+        assert rid in out
+
+
+def test_repo_tree_is_clean_under_committed_baseline():
+    """The acceptance gate, as a test: the shipped tree analyzes clean."""
+    import os
+    root = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
+    result = analyze_paths(["src/repro", "benchmarks", "examples"], root)
+    assert [f.render() for f in result.findings] == []
+
+
+def test_rule_catalogue_is_stable():
+    ids = [r.id for r in all_rules()]
+    assert ids == sorted(ids) and len(ids) == len(set(ids))
+    assert {"FXP001", "FXP002", "FXP003", "JAX101", "JAX102", "JAX103",
+            "ASY301", "ASY302", "ASY303", "ASY304"} <= set(ids)

@@ -1,0 +1,195 @@
+"""Pump offload + per-graph telemetry labels: the event loop stays live
+while a wave computes on the worker thread, offload=False restores in-loop
+execution, a mid-wave delta cannot poison the cache (epoch-pinned fills),
+resolved futures imply completed wave accounting, and the queries/shed/
+degraded counters carry per-graph labels."""
+import asyncio
+import threading
+
+import numpy as np
+import pytest
+
+from repro.graphs import holme_kim_powerlaw
+from repro.graph_updates import localized_delta
+from repro.ppr_serving import (
+    AdmissionConfig,
+    AdmissionController,
+    PPRHTTPServer,
+    PPRQuery,
+    PPRService,
+)
+from repro.ppr_serving.http import WavePump, http_request
+
+
+@pytest.fixture(scope="module")
+def graph():
+    return holme_kim_powerlaw(300, m=3, seed=7)
+
+
+# ---------------------------------------------------------------------------
+# the offload itself
+# ---------------------------------------------------------------------------
+def test_loop_answers_healthz_while_wave_computes(graph):
+    """The ROADMAP item-3 seam, closed: with the default offload, a wave
+    stuck on the worker thread must not stop the loop from serving
+    /v1/healthz — the old in-loop pump would have blocked here."""
+    svc = PPRService(kappa=1, iterations=3, max_wait=100.0)
+    svc.register_graph("g", graph)
+    svc.run_batch([PPRQuery("g", 0, k=3)])      # jit warm, off the clock
+    started, release = threading.Event(), threading.Event()
+    orig = svc._run_wave
+
+    def stuck_wave(wave):
+        started.set()
+        assert release.wait(30.0), "test released nothing"
+        return orig(wave)
+
+    svc._run_wave = stuck_wave
+    server = PPRHTTPServer(svc, pump_interval_s=0.002)
+
+    async def scenario():
+        await server.start()
+        host, port = server.host, server.port
+        post = asyncio.create_task(http_request(
+            host, port, "POST", "/v1/ppr",
+            {"graph": "g", "vertex": 7, "k": 4}))
+        loop = asyncio.get_running_loop()
+        deadline = loop.time() + 10.0
+        while not started.is_set():
+            assert loop.time() < deadline, "wave never launched"
+            await asyncio.sleep(0.002)
+        # the wave is parked on the worker thread right now; the loop must
+        # still answer — this await would deadlock on the in-loop pump
+        status, _, health = await http_request(host, port,
+                                               "GET", "/v1/healthz")
+        assert status == 200 and not post.done()
+        release.set()
+        status, _, payload = await post
+        assert status == 200
+        assert [r["vertex"] for r in payload["recommendations"]]
+        await server.stop()
+
+    asyncio.run(scenario())
+    assert server.pump._executor is None        # stop() tore the worker down
+
+
+def test_resolved_future_implies_completed_wave_accounting(graph):
+    """The race /v1/metrics exposed: a handler wakes the moment its future
+    resolves, so resolution must be the *last* thing a wave does — counters
+    and traces land first.  Checked at the seam: when the HTTP response
+    arrives, ppr_waves_total is already incremented."""
+    svc = PPRService(kappa=1, iterations=3, max_wait=100.0)
+    svc.register_graph("g", graph)
+    svc.run_batch([PPRQuery("g", 0, k=3)])
+    svc.telemetry.reset()
+    server = PPRHTTPServer(svc, pump_interval_s=0.002)
+
+    async def scenario():
+        await server.start()
+        host, port = server.host, server.port
+        for i, v in enumerate((3, 9, 11), start=1):
+            status, _, _ = await http_request(
+                host, port, "POST", "/v1/ppr",
+                {"graph": "g", "vertex": v, "k": 4})
+            assert status == 200
+            # no sleep, no drain: the counter must already be visible
+            assert svc.telemetry.waves == i
+            assert svc.telemetry.queries_served == i
+        await server.stop()
+
+    asyncio.run(scenario())
+
+
+def test_offload_false_runs_waves_in_loop(graph):
+    """offload=False is the single-threaded debug mode: no executor exists,
+    and waves still resolve (in the loop thread, as before the offload)."""
+    svc = PPRService(kappa=1, iterations=3, max_wait=100.0)
+    svc.register_graph("g", graph)
+    pump = WavePump(svc, interval_s=0.001, offload=False)
+
+    async def scenario():
+        pump.start()
+        assert pump._executor is None
+        fut = svc.submit(PPRQuery("g", 5, k=4))
+        deadline = asyncio.get_running_loop().time() + 10.0
+        while not fut.done():
+            assert asyncio.get_running_loop().time() < deadline
+            await asyncio.sleep(0.002)
+        await pump.stop()
+        return fut.result()
+
+    rec = asyncio.run(scenario())
+    assert rec.source == "wave" and len(rec.vertices) == 4
+    assert pump._executor is None
+
+
+def test_mid_wave_delta_cannot_poison_cache(graph):
+    """With the offload, apply_delta can land while a wave computes.  The
+    wave's cache fills are pinned to the epoch it was *launched* under, so
+    its stale results can never masquerade as post-delta entries."""
+    svc = PPRService(kappa=1, iterations=4, max_wait=100.0)
+    svc.register_graph("g", graph)
+    d = localized_delta(graph, np.random.default_rng(11), n_add=3, n_remove=1)
+    frontier = set(int(v) for v in d.affected_frontier(graph))
+    vertex = next(v for v in range(graph.num_vertices) if v not in frontier)
+
+    q = PPRQuery("g", vertex, k=5)
+    fut = svc.submit(q)
+    # reproduce the race deterministically: pop the wave (what poll() does on
+    # the worker thread)...
+    with svc._lock:
+        popped = svc.scheduler.flush_keys([fut._wave_key])
+    assert len(popped) == 1
+    old_epoch = svc._graphs["g"].epoch
+    # ...let the delta land "mid-wave"...
+    svc.apply_delta("g", d)
+    assert svc._graphs["g"].epoch == old_epoch + 1
+    # ...then finish the wave.  Its result resolves the future (computed on
+    # the topology the caller was admitted under)...
+    svc._run_wave(popped[0])
+    assert fut.done() and fut.result().source == "wave"
+    # ...and its cache fill sits under the OLD epoch, unreachable from the
+    # new one: resubmitting must miss and queue a fresh computation
+    pkey = fut.result().precision
+    assert svc._cache_key(q, pkey, epoch=old_epoch) in svc.cache
+    fut2 = svc.submit(q)
+    assert not fut2.done()                      # miss -> queued, not stale hit
+    svc.flush()
+    assert fut2.result().source == "wave"
+
+
+# ---------------------------------------------------------------------------
+# per-graph counter labels
+# ---------------------------------------------------------------------------
+def test_queries_served_labeled_by_graph(graph):
+    svc = PPRService(kappa=2, iterations=3, max_wait=100.0)
+    svc.register_graph("a", graph)
+    svc.register_graph("b", graph)
+    svc.run_batch([PPRQuery("a", v, k=3) for v in range(3)] +
+                  [PPRQuery("b", v, k=3) for v in range(2)])
+    t = svc.telemetry
+    assert t.queries_served_by_graph == {"a": 3, "b": 2}
+    assert t.queries_served == 5                # legacy scalar = sum of series
+
+
+def test_shed_and_degraded_counters_labeled_by_graph(graph):
+    svc = PPRService(kappa=64, iterations=3, max_wait=100.0)
+    svc.register_graph("g", graph, formats=[26])
+    # park 4 queries in a partial wave (kappa=64 never fills) so the
+    # controller sees a real depth above high_water
+    futs = [svc.submit(PPRQuery("g", v, k=3)) for v in range(4)]
+    ctrl = AdmissionController(svc, AdmissionConfig(
+        high_water=2, low_water=1, deepen_water=500, kappa_max=64))
+    assert ctrl.admit(graph="g") is not None    # shed, attributed
+    assert ctrl.admit() is not None             # shed, unattributed
+    t = svc.telemetry
+    assert t.queries_shed_by_graph == {"g": 1, t.UNATTRIBUTED: 1}
+    assert t.queries_shed == 2
+
+    # SLO degradation counts against the graph whose query was degraded
+    svc.degrade_quality(0.90)
+    svc.submit(PPRQuery("g", 9, k=3, precision="auto", quality_target=0.95))
+    assert t.slo_degraded_queries_by_graph == {"g": 1}
+    assert t.slo_degraded_queries == 1
+    svc.flush()
+    assert all(f.done() for f in futs)
