@@ -6,6 +6,8 @@ response: admitted-request latency (p50/p95), shed rate past the high-water
 mark, SLO quality degradation under sustained overload, and the recovery
 transitions once load drops — the serving analogue of the paper's
 throughput-vs-precision tables, with the precision dial turned *by load*.
+Each level also runs the burn-rate monitor (bench-scale windows) and
+reports latency-SLO compliance plus how many burn alerts engaged.
 
     PYTHONPATH=src python benchmarks/bench_serving_http.py [--scale 0.02] [--dry-run]
 
@@ -30,6 +32,7 @@ from typing import Dict, List, Optional, Tuple
 import numpy as np
 
 from repro.graphs import holme_kim_powerlaw
+from repro.obs import SLOSpec
 from repro.ppr_serving import (AdmissionConfig, PPRHTTPServer, PPRQuery,
                                PPRService)
 from repro.ppr_serving.http import AsyncHTTPClient, http_request
@@ -37,6 +40,16 @@ from repro.ppr_serving.http import AsyncHTTPClient, http_request
 #: (mode, offered) levels — closed: concurrent users; open: requests/s
 LEVELS: Tuple[Tuple[str, int], ...] = (("closed", 4), ("open", 100),
                                        ("open", 400))
+
+
+def _slo_specs() -> Tuple[SLOSpec, ...]:
+    """Latency + shed SLOs on bench-scale burn windows: production uses the
+    SRE 5m/1h/6h pairs, but a level here lasts seconds, so the windows
+    shrink with it — same algebra, faster clock."""
+    windows = {"fast_windows": (0.5, 2.0), "slow_windows": (2.0, 8.0)}
+    return (SLOSpec(name="latency_p95", kind="latency",
+                    objective=0.262144, budget=0.05, **windows),
+            SLOSpec(name="shed_rate", kind="shed", budget=0.05, **windows))
 
 
 def _admission(kappa: int) -> AdmissionConfig:
@@ -64,7 +77,8 @@ async def _drain(host: str, port: int, timeout_s: float = 30.0) -> bool:
 async def _run_level(g, mode: str, offered: int, n_requests: int,
                      kappa: int, iterations: int, seed: int) -> Dict:
     svc = PPRService(kappa=kappa, iterations=iterations, max_wait=0.002,
-                     cache_capacity=0)          # measure compute, not cache
+                     cache_capacity=0,          # measure compute, not cache
+                     slo=_slo_specs())
     svc.register_graph("g", g, formats=[26])
     # warm the jit caches outside the timed window (base κ; deepened κ
     # shapes compile mid-overload, which the open-loop rows absorb as real
@@ -132,6 +146,15 @@ async def _run_level(g, mode: str, offered: int, n_requests: int,
     _, _, stats = await http_request(host, port, "GET", "/v1/stats")
     await server.stop()
 
+    # SLO accounting for the row: in-objective fraction of admitted-query
+    # latency, and how many times a burn alert engaged during the level
+    slo = {s["name"]: s for s in svc.slo.status()["specs"]}
+    lat_spec = slo["latency_p95"]
+    lat_events = lat_spec["good_total"] + lat_spec["bad_total"]
+    slo_compliance = (lat_spec["good_total"] / lat_events
+                      if lat_events else 1.0)
+    slo_burn_events = len(svc.recorder.events_of_kind("slo_burning"))
+
     lat = np.asarray(latencies, np.float64)
     ok = int(lat.size)
     return {
@@ -153,6 +176,9 @@ async def _run_level(g, mode: str, offered: int, n_requests: int,
         "slo_degrade_events": stats["slo_degrade_events"],
         "slo_degraded_queries": stats["slo_degraded_queries"],
         "slo_recover_events": stats["slo_recover_events"],
+        "slo_compliance": float(slo_compliance),
+        "slo_burn_events": int(slo_burn_events),
+        "queries_deadline_shed": stats["queries_deadline_shed"],
         "kappa_deepen_events": stats["kappa_deepen_events"],
         "kappa_relax_events": stats["kappa_relax_events"],
         "V": g.num_vertices,
@@ -188,7 +214,9 @@ def main(scale: float = 0.02, dry_run: bool = False):
               f";p95_ms={r['latency_p95_ms']:.1f}"
               f";degraded={r['degraded_served']}"
               f";recovered={int(r['recovered'])}"
-              f";depth_peak={r['queue_depth_peak']}")
+              f";depth_peak={r['queue_depth_peak']}"
+              f";slo_compliance={r['slo_compliance']:.3f}"
+              f";slo_burns={r['slo_burn_events']}")
     return rows
 
 

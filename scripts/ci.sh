@@ -49,6 +49,67 @@ for bad in fxp_bad.py jax_bad.py asy_bad.py; do
 done
 echo "analyzer correctly rejected all 3 injected violations"
 
+echo "== OTLP loopback smoke (stub collector, nonzero exit on drops) =="
+# the exporter's default urllib transport against a real (loopback) HTTP
+# sink: every queued span must arrive, the delta metrics push must land,
+# and nothing may drop or fail — the wire path the unit tests inject around
+python - <<'EOF'
+import json
+import sys
+import threading
+from http.server import BaseHTTPRequestHandler, HTTPServer
+
+from repro.obs import MetricsRegistry, OTLPExporter, Tracer
+
+hits = {"spans": 0, "metric_pushes": 0}
+
+
+class Sink(BaseHTTPRequestHandler):
+    def do_POST(self):
+        payload = json.loads(
+            self.rfile.read(int(self.headers.get("Content-Length", 0))))
+        if self.path == "/v1/traces":
+            hits["spans"] += sum(
+                len(ss["spans"]) for rs in payload["resourceSpans"]
+                for ss in rs["scopeSpans"])
+        elif self.path == "/v1/metrics":
+            hits["metric_pushes"] += 1
+        self.send_response(200)
+        self.send_header("Content-Length", "2")
+        self.end_headers()
+        self.wfile.write(b"{}")
+
+    def log_message(self, *args):
+        pass
+
+
+collector = HTTPServer(("127.0.0.1", 0), Sink)
+threading.Thread(target=collector.serve_forever, daemon=True).start()
+
+reg = MetricsRegistry()
+exp = OTLPExporter(f"http://127.0.0.1:{collector.server_port}",
+                   registry=reg, max_batch=8)
+tracer = Tracer(sink=exp.record_trace)
+for i in range(32):
+    tr = tracer.start("query", "query", vertex=i)
+    tr.span("wave", 0.0).end(0.001)
+    tracer.finish(tr)
+reg.counter("smoke_total", "Loopback smoke traffic.").get().inc(3)
+exp.flush(reg)
+collector.shutdown()
+
+s = exp.stats()
+print(f"otlp smoke: {s['spans_exported']} spans / "
+      f"{s['span_batches_sent']} batches delivered, "
+      f"{s['metric_pushes']} metric pushes, "
+      f"{s['spans_dropped']} dropped, {s['send_failures']} send failures")
+ok = (s["spans_exported"] == 64 and hits["spans"] == 64
+      and s["metric_pushes"] >= 1 and hits["metric_pushes"] >= 1
+      and s["spans_dropped"] == 0 and s["send_failures"] == 0
+      and s["queue_depth"] == 0)
+sys.exit(0 if ok else 1)
+EOF
+
 echo "== examples smoke (ported to the futures API, deprecation-clean) =="
 # the ported examples must not touch the deprecated serve()/pump()/drain()
 # wrappers — the warning is attributed to the calling frame (stacklevel), so

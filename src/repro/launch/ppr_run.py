@@ -65,6 +65,19 @@ def _parse_args(argv=None):
                     help="after the run, print the flight recorder's last N "
                          "traces as span trees plus control-plane events "
                          "(implies --trace)")
+    ap.add_argument("--trace-sample", type=float, default=None, metavar="RATE",
+                    help="head-sample tracing at RATE in (0, 1] instead of "
+                         "tracing everything (implies --trace; seeded, so a "
+                         "replayed run samples the same queries)")
+    ap.add_argument("--slo", action="store_true",
+                    help="with --http: arm the SLO burn-rate monitor "
+                         "(default latency/shed/quality specs, GET /v1/slo, "
+                         "burn-driven admission advisories)")
+    ap.add_argument("--otlp-endpoint", default=None, metavar="URL",
+                    help="with --http: export spans + delta metrics to an "
+                         "OTLP/HTTP collector at URL (POSTs to URL/v1/traces "
+                         "and URL/v1/metrics); the flight recorder still "
+                         "records everything locally")
     return ap.parse_args(argv)
 
 
@@ -184,9 +197,13 @@ def _serve_http(args, g, fmt, label):
 
     from repro.ppr_serving import PPRHTTPServer, PPRService
 
+    otlp = None
+    if args.otlp_endpoint:
+        from repro.obs import OTLPExporter
+        otlp = OTLPExporter(args.otlp_endpoint)
     svc = PPRService(kappa=args.kappa, iterations=args.iterations,
                      alpha=args.alpha, max_wait=0.005, early_exit=True,
-                     tracing=_tracing(args))
+                     tracing=_tracing(args), slo=args.slo or None, otlp=otlp)
     svc.register_graph(args.graph, g, formats=[] if fmt is None else [fmt])
     server = PPRHTTPServer(svc, port=args.http)
 
@@ -200,7 +217,12 @@ def _serve_http(args, g, fmt, label):
         print("  GET  /v1/healthz  liveness + queue depth")
         print("  GET  /v1/stats    telemetry + admission counters")
         print("  GET  /v1/metrics  Prometheus text exposition (?format=json)")
+        if svc.slo is not None:
+            print("  GET  /v1/slo      SLO states + burn rates (?n=K events)")
         print("  GET  /v1/debug/traces  flight recorder (?n=K)")
+        if otlp is not None:
+            print(f"  exporting OTLP to {otlp.endpoint} "
+                  f"(/v1/traces, /v1/metrics)")
         try:
             await asyncio.Event().wait()
         finally:
@@ -210,6 +232,13 @@ def _serve_http(args, g, fmt, label):
         asyncio.run(_run())
     except KeyboardInterrupt:
         print("\nshutting down")
+    if otlp is not None:
+        s = otlp.stats()
+        print(f"otlp: {s['spans_exported']} spans in "
+              f"{s['span_batches_sent']} batches, "
+              f"{s['metric_pushes']} metric pushes, "
+              f"{s['spans_dropped']} dropped, "
+              f"{s['send_failures']} failed sends")
     if args.dump_traces:
         _dump_recorder(svc, args.dump_traces)
 
@@ -284,7 +313,11 @@ def _replay_deltas(args, g, fmt, label):
         _dump_recorder(svc, args.dump_traces)
 
 
-def _tracing(args) -> bool:
+def _tracing(args):
+    """The service's ``tracing`` argument: a sample rate when requested,
+    else the plain on/off bool."""
+    if args.trace_sample is not None:
+        return args.trace_sample
     return bool(args.trace or args.dump_traces)
 
 

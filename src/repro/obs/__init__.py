@@ -16,13 +16,26 @@ is the time-resolved counterpart, with memory O(1) in queries served:
                  traces and admission-control transitions, so a shed/degrade
                  incident can be reconstructed after the fact.
 ``export.py``    Prometheus text exposition (``GET /v1/metrics``), JSON
-                 dumps, and terminal-friendly trace rendering.
+                 dumps, and terminal-friendly trace/SLO rendering.
+``slo.py``       declarative SLO specs (latency / shed rate / shadow
+                 quality) evaluated over sliding windows by an
+                 injected-clock ``SLOMonitor`` with multi-window error-budget
+                 burn-rate alerting — the layer that makes the instruments
+                 actionable.
+``otlp.py``      stdlib-only OTLP/HTTP-JSON exporter: spans via a fan-out
+                 ``Tracer`` sink beside the flight recorder, metrics via a
+                 periodic delta-temporality push.
 
 Everything is clock-injected and deterministic under test; nothing here
 imports jax — the observability layer must never be the thing that makes
 the hot path slow or the test suite heavy.
 """
-from repro.obs.export import format_event, format_trace, prometheus_text
+from repro.obs.export import (
+    format_event,
+    format_slo,
+    format_trace,
+    prometheus_text,
+)
 from repro.obs.metrics import (
     Counter,
     Gauge,
@@ -31,13 +44,17 @@ from repro.obs.metrics import (
     Reservoir,
     exponential_buckets,
 )
+from repro.obs.otlp import OTLPExporter
 from repro.obs.recorder import FlightRecorder
-from repro.obs.trace import Span, Trace, Tracer
+from repro.obs.slo import SLOMonitor, SLOSpec, default_slo_specs
+from repro.obs.trace import Span, Trace, Tracer, fanout_sink
 
 __all__ = [
     "Counter", "Gauge", "Histogram", "Reservoir", "MetricsRegistry",
     "exponential_buckets",
-    "Span", "Trace", "Tracer",
+    "Span", "Trace", "Tracer", "fanout_sink",
     "FlightRecorder",
-    "prometheus_text", "format_trace", "format_event",
+    "SLOSpec", "SLOMonitor", "default_slo_specs",
+    "OTLPExporter",
+    "prometheus_text", "format_trace", "format_event", "format_slo",
 ]

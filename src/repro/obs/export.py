@@ -29,7 +29,7 @@ from typing import Any, Dict, List, Mapping
 
 from repro.obs.metrics import MetricsRegistry
 
-__all__ = ["prometheus_text", "format_trace", "format_event"]
+__all__ = ["prometheus_text", "format_trace", "format_event", "format_slo"]
 
 _QUANTILES = (("0.5", 50.0), ("0.95", 95.0), ("0.99", 99.0))
 
@@ -129,3 +129,19 @@ def format_event(event: Mapping[str, Any]) -> str:
     """One flight-recorder control-plane event as a single line."""
     extra = {k: v for k, v in event.items() if k not in ("t_s", "kind")}
     return f"t={event['t_s']:.4f}s {event['kind']}{_fmt_attrs(extra)}"
+
+
+def format_slo(status: Mapping[str, Any]) -> str:
+    """An ``SLOMonitor.status()`` dict as a terminal table — one line per
+    spec with its state and per-window burn rates."""
+    burning = ", ".join(status.get("burning", [])) or "none"
+    lines: List[str] = [f"slo status  ({status.get('ticks', 0)} ticks, "
+                        f"burning: {burning})"]
+    for spec in status.get("specs", ()):
+        windows = spec.get("windows", {})
+        burns = "  ".join(
+            f"{w}s={info.get('burn_rate', 0.0):.2f}"
+            for w, info in sorted(windows.items(), key=lambda kv: float(kv[0])))
+        lines.append(f"  {spec['name']:<16s} {spec['kind']:<8s} "
+                     f"{spec['state']:<8s} {burns}")
+    return "\n".join(lines)

@@ -62,6 +62,14 @@ class FlightRecorder:
         out = list(self._events)
         return out if n is None else out[-n:]
 
+    def events_of_kind(self, *kinds: str,
+                       n: Optional[int] = None) -> List[Dict[str, Any]]:
+        """The most recent ``n`` events whose kind is in ``kinds``, oldest
+        first — how ``/v1/slo`` pulls just the alert transitions out of the
+        shared control-plane ring."""
+        out = [ev for ev in self._events if ev["kind"] in kinds]
+        return out if n is None else out[-n:]
+
     def snapshot(self, n_traces: Optional[int] = None,
                  n_events: Optional[int] = None) -> Dict[str, Any]:
         """JSON-ready dump: what ``/v1/debug/traces`` serves."""

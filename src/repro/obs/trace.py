@@ -28,7 +28,25 @@ import itertools
 import time
 from typing import Any, Callable, Dict, List, Optional
 
-__all__ = ["Span", "Trace", "Tracer"]
+__all__ = ["Span", "Trace", "Tracer", "fanout_sink"]
+
+
+def fanout_sink(*sinks: Callable[["Trace"], None]
+                ) -> Callable[["Trace"], None]:
+    """Compose tracer sinks: every completed trace goes to each sink in
+    order.  The flight recorder stays the first, authoritative sink; an
+    exporter rides beside it — export augments the local record, never
+    replaces it.  ``None`` entries are skipped so callers can pass optional
+    sinks unconditionally."""
+    live = tuple(s for s in sinks if s is not None)
+    if len(live) == 1:
+        return live[0]
+
+    def sink(trace: "Trace") -> None:
+        for s in live:
+            s(trace)
+
+    return sink
 
 
 @dataclasses.dataclass

@@ -24,6 +24,19 @@ Every decision is counted in ``ServiceTelemetry`` (the ``queries_shed`` /
 the full audit trail of what quality was traded when, and whether it
 recovered.
 
+When the service carries an ``SLOMonitor`` (``PPRService(slo=...)``), the
+controller closes the loop the monitor opens: each tick also advances the
+monitor, and a *burning* latency or shed SLO pushes the same ladder —
+κ deepens to at least its first rung and the quality ceiling engages even
+while the queue alone looks healthy (burn is the leading indicator; depth
+the trailing one).  A burning *quality* SLO does the opposite: it vetoes
+the degrade step (and lifts an active ceiling), because trading more
+quality while the quality objective is already out of budget digs the
+hole deeper.  Every SLO-driven move is counted
+(``ppr_slo_advisory_total{action=deepen|degrade|veto}``) and lands in the
+flight recorder, so depth-driven and burn-driven decisions stay
+distinguishable after the fact.
+
 The controller is transport-independent: it only needs a ``PPRService`` (its
 ``queue_depth``/``set_kappa``/``degrade_quality``/``restore_quality`` hooks)
 and a clock — unit tests drive it with a fake depth signal and no sockets.
@@ -77,7 +90,8 @@ class AdmissionController:
     """Hysteretic shed/degrade/deepen state machine over the service's
     queue-depth signal."""
 
-    def __init__(self, service, config: AdmissionConfig = AdmissionConfig()):
+    def __init__(self, service, config: AdmissionConfig = AdmissionConfig(),
+                 slo=None):
         self.service = service
         self.config = config
         self.base_kappa = service.kappa
@@ -85,6 +99,10 @@ class AdmissionController:
             raise ValueError(
                 f"kappa_max={config.kappa_max} is below the service's base "
                 f"kappa={self.base_kappa} — the controller only deepens")
+        # the burn-rate monitor feeding the advisory signal: explicit, or
+        # the service's own (PPRService(slo=...)); None keeps the controller
+        # purely depth-driven, bit-identical to the pre-SLO behavior
+        self.slo = slo if slo is not None else getattr(service, "slo", None)
         self.shedding = False
         self.degrading = False
         self.admitted = 0
@@ -110,14 +128,40 @@ class AdmissionController:
         depth = svc.queue_depth()
         svc.telemetry.record_queue_depth(depth, svc.oldest_wait_s(now))
 
-        kappa = self.target_kappa(depth)
+        # SLO advisory: a burning latency/shed SLO pushes the ladder ahead
+        # of queue depth; a burning quality SLO vetoes further degradation.
+        push = veto = False
+        if self.slo is not None:
+            self.slo.tick(now)
+            kinds = self.slo.burning_kinds()
+            push = bool(kinds & {"latency", "shed"})
+            veto = "quality" in kinds
+
+        # burn counts as if the queue had already reached the deepen mark —
+        # the first κ doubling lands before depth alone would take it
+        kappa = self.target_kappa(
+            max(depth, cfg.deepen_water) if push else depth)
         if kappa != svc.kappa:
+            if push and kappa > svc.kappa and depth < cfg.deepen_water:
+                self._advise("deepen", now, depth=depth)
             svc.set_kappa(kappa)       # counts deepen/relax in telemetry
 
-        if not self.degrading and depth > cfg.degrade_water:
+        want_degrade = depth > cfg.degrade_water or push
+        if veto:
+            # quality budget already burning: do not trade more quality, and
+            # lift an active ceiling rather than hold it
+            if self.degrading:
+                self._advise("veto", now, depth=depth)
+                self.degrading = False
+                svc.restore_quality()
+            elif want_degrade:
+                self._advise("veto", now, depth=depth)
+        elif not self.degrading and want_degrade:
+            if push and depth <= cfg.degrade_water:
+                self._advise("degrade", now, depth=depth)
             self.degrading = True
             svc.degrade_quality(cfg.degraded_target)
-        elif self.degrading and depth <= cfg.degrade_low_water:
+        elif self.degrading and depth <= cfg.degrade_low_water and not push:
             self.degrading = False
             svc.restore_quality()
 
@@ -130,6 +174,15 @@ class AdmissionController:
             svc.telemetry.record_shed_transition(engaged=False)
             self._event("shed_recovered", now, depth=depth)
         return depth
+
+    def _advise(self, action: str, now: Optional[float], **attrs) -> None:
+        """Count + record one SLO-driven ladder move (``deepen`` /
+        ``degrade`` / ``veto``) — what separates burn-driven decisions from
+        plain depth-driven ones in the audit trail."""
+        telemetry = getattr(self.service, "telemetry", None)
+        if telemetry is not None and hasattr(telemetry, "record_slo_advisory"):
+            telemetry.record_slo_advisory(action)
+        self._event("slo_advisory", now, action=action, **attrs)
 
     def _event(self, kind: str, now: Optional[float], **attrs) -> None:
         """Shed transitions into the service's flight recorder, when it has
@@ -158,7 +211,7 @@ class AdmissionController:
         return None
 
     def stats(self) -> Dict[str, float]:
-        return {
+        out = {
             "admitted": self.admitted,
             "shed": self.shed,
             "shedding": self.shedding,
@@ -166,3 +219,6 @@ class AdmissionController:
             "kappa": self.service.kappa,
             "base_kappa": self.base_kappa,
         }
+        if self.slo is not None:
+            out["slo_burning"] = sorted(self.slo.burning())
+        return out

@@ -9,7 +9,12 @@ so deadline-expired partial waves launch within one interval of their
 admission budget, full waves launch on the next cycle, and the admission
 controller's shed/degrade/deepen state tracks the queue even when no
 requests are arriving (recovery transitions happen *here*, as the queue
-drains, not on the next arrival).
+drains, not on the next arrival).  The heartbeat also carries the
+observability duties that need a clock: SLO burn-rate evaluation (through
+``admission.tick`` when a controller is attached, directly otherwise) and
+OTLP export cycles (span-batch drains + periodic delta metric pushes, run
+off the loop thread like wave compute; the stop path flushes the exporter
+so shutdown loses no queued telemetry).
 
 Wave compute is synchronous JAX; by default it is offloaded to a dedicated
 single worker thread (``offload=True``), so the event loop keeps admitting,
@@ -95,6 +100,13 @@ class WavePump:
             self._waves_metric.get().inc(flushed)
         if self.admission is not None:
             self.admission.tick()      # record the drained queue / recovery
+        elif getattr(self.service, "slo", None) is not None:
+            self.service.slo.tick()
+        if getattr(self.service, "otlp", None) is not None:
+            # final export: queued spans and the closing delta window must
+            # not die with the process
+            await self._drive(lambda: self.service.otlp.flush(
+                self.service.telemetry.registry))
         if self._executor is not None:
             self._executor.shutdown(wait=True)
             self._executor = None
@@ -106,10 +118,19 @@ class WavePump:
                 self._cycles_metric.get().inc()
             if self.admission is not None:
                 self.admission.tick()
+            elif getattr(self.service, "slo", None) is not None:
+                # no admission controller to carry the monitor: evaluate the
+                # SLOs on the heartbeat anyway (alerting without the ladder)
+                self.service.slo.tick()
             launched = await self._drive(self.service.poll)
             self.waves_launched += launched
             if self._waves_metric is not None and launched:
                 self._waves_metric.get().inc(launched)
+            otlp = getattr(self.service, "otlp", None)
+            if otlp is not None and otlp.due():
+                # exporter I/O (HTTP POSTs) stays off the event loop, like
+                # wave compute; an idle cycle pays only the due() check
+                await self._drive(self.service.export_telemetry)
             # a launch may have unblocked more ready waves (κ changed, or a
             # deadline expired mid-wave) — loop immediately while productive,
             # yielding to the loop so handlers can run between waves

@@ -14,11 +14,15 @@ Endpoints:
 
     POST /v1/ppr      submit one query; 200 with ranked recommendations,
                       400 bad request, 404 unknown graph, 429 + Retry-After
-                      shed, 409 delta-invalidated, 410 graph-replaced
+                      shed, 409 delta-invalidated, 410 graph-replaced,
+                      504 deadline-exceeded (dropped at wave launch)
     GET  /v1/healthz  liveness + registered graphs + queue depth
     GET  /v1/stats    full ServiceTelemetry summary + admission + pump stats
     GET  /v1/metrics  the metrics registry in Prometheus text exposition
                       format (0.0.4); ``?format=json`` for the JSON dump
+    GET  /v1/slo      SLO monitor status: per-spec state + per-window burn
+                      rates + recent alert transitions (404 when the
+                      service runs without an SLO monitor)
     GET  /v1/debug/traces   flight-recorder snapshot (last completed traces
                       + control-plane events); ``?n=K`` bounds both lists
 
@@ -48,10 +52,12 @@ __all__ = ["HTTPRequest", "HTTPResponse", "ServingApp",
 
 _REASONS = {200: "OK", 400: "Bad Request", 404: "Not Found",
             405: "Method Not Allowed", 409: "Conflict", 410: "Gone",
-            429: "Too Many Requests", 500: "Internal Server Error"}
+            429: "Too Many Requests", 500: "Internal Server Error",
+            504: "Gateway Timeout"}
 
 #: QueryRejected.code → HTTP status (the rejection-path contract)
-_REJECT_STATUS = {"graph-replaced": 410, "delta-invalidated": 409}
+_REJECT_STATUS = {"graph-replaced": 410, "delta-invalidated": 409,
+                  "deadline-exceeded": 504}
 
 
 @dataclasses.dataclass(frozen=True)
@@ -99,17 +105,19 @@ class ServingApp:
             return self._handle_stats()
         if route == ("GET", "/v1/metrics"):
             return self._handle_metrics(params)
+        if route == ("GET", "/v1/slo"):
+            return self._handle_slo(params)
         if route == ("GET", "/v1/debug/traces"):
             return self._handle_traces(params)
         if path in ("/v1/ppr", "/v1/healthz", "/v1/stats", "/v1/metrics",
-                    "/v1/debug/traces"):
+                    "/v1/slo", "/v1/debug/traces"):
             return HTTPResponse(405, error_payload(
                 f"method {req.method} not allowed on {path}",
                 "method-not-allowed"))
         return HTTPResponse(404, error_payload(
             f"no route {req.method} {path} "
             f"(have POST /v1/ppr, GET /v1/healthz, GET /v1/stats, "
-            f"GET /v1/metrics, GET /v1/debug/traces)",
+            f"GET /v1/metrics, GET /v1/slo, GET /v1/debug/traces)",
             "unknown-route"))
 
     # ------------------------------------------------------------------
@@ -214,6 +222,33 @@ class ServingApp:
         return HTTPResponse(
             200, {}, body=prometheus_text(registry).encode("utf-8"),
             content_type="text/plain; version=0.0.4; charset=utf-8")
+
+    def _handle_slo(self, params: Dict[str, str]) -> HTTPResponse:
+        """SLO monitor status: per-spec state, per-window burn rates, totals,
+        plus the most recent alert transitions out of the flight recorder.
+        Ticks the monitor first so a curl during a flood sees current burn,
+        not the last heartbeat's."""
+        slo = getattr(self.service, "slo", None)
+        if slo is None:
+            return HTTPResponse(404, error_payload(
+                "this service runs without an SLO monitor — construct it "
+                "with PPRService(slo=True) or pass --slo to ppr_run",
+                "slo-monitoring-off"))
+        slo.tick()
+        out: Dict[str, Any] = slo.status()
+        recorder = getattr(self.service, "recorder", None)
+        if recorder is not None:
+            n = 32
+            if "n" in params:
+                try:
+                    n = max(0, int(params["n"]))
+                except ValueError:
+                    return HTTPResponse(400, error_payload(
+                        f"n must be an integer, got {params['n']!r}",
+                        "bad-request"))
+            out["recent_events"] = recorder.events_of_kind(
+                "slo_burning", "slo_recovered", "slo_advisory", n=n)
+        return HTTPResponse(200, out)
 
     def _handle_traces(self, params: Dict[str, str]) -> HTTPResponse:
         """Flight-recorder snapshot: the last completed query/wave traces and

@@ -15,9 +15,11 @@ Time is injectable (``time_fn``) to keep the policy deterministic under test.
 from __future__ import annotations
 
 import dataclasses
+import heapq
+import itertools
 import time
 from collections import OrderedDict
-from typing import Any, Hashable, List, Optional
+from typing import Any, Hashable, List, Optional, Tuple
 
 
 @dataclasses.dataclass
@@ -56,14 +58,32 @@ class WaveScheduler:
         self.time_fn = time_fn
         self._queues: "OrderedDict[Hashable, List[_Pending]]" = OrderedDict()
         self._depth = 0                # maintained by every mutation below
+        # lazy min-heap of (head enqueue stamp, seq, key): each queue is FIFO
+        # in enqueue time, so the globally oldest pending item is some queue's
+        # head.  Mutations push a fresh entry whenever a queue's head changes;
+        # reads pop entries that no longer describe a live head.  seq breaks
+        # stamp ties without ever comparing (possibly heterogeneous) keys.
+        self._heads: List[Tuple[float, int, Hashable]] = []
+        self._head_seq = itertools.count()
+
+    def _note_head(self, key: Hashable) -> None:
+        """Record ``key``'s current queue head in the lazy heap (no-op for an
+        empty/absent queue — reads skip stale entries)."""
+        q = self._queues.get(key)
+        if q:
+            heapq.heappush(self._heads,
+                           (q[0].enqueued_at, next(self._head_seq), key))
 
     # ------------------------------------------------------------------
     def submit(self, key: Hashable, item: Any,
                deadline: Optional[float] = None,
                now: Optional[float] = None) -> None:
         now = self.time_fn() if now is None else now
-        self._queues.setdefault(key, []).append(_Pending(item, now, deadline))
+        q = self._queues.setdefault(key, [])
+        q.append(_Pending(item, now, deadline))
         self._depth += 1
+        if len(q) == 1:                # new head ⇒ new heap entry
+            self._note_head(key)
 
     def pending(self) -> int:
         return sum(len(q) for q in self._queues.values())
@@ -78,15 +98,25 @@ class WaveScheduler:
 
     def oldest_wait_s(self, now: Optional[float] = None) -> float:
         """Seconds the longest-waiting pending query has been queued (0.0
-        when nothing is pending).  O(active wave keys): each key's queue is
-        FIFO in enqueue time, so only the heads need comparing — and live
-        services hold a handful of (graph, precision, mesh, epoch) streams,
-        not one per query."""
+        when nothing is pending).
+
+        Amortized O(1): the lazy head heap already orders the per-key queue
+        heads by enqueue stamp, so a read peeks the top and only pops entries
+        invalidated since they were pushed (each mutation creates at most one
+        such entry, and each is discarded exactly once).  The pump reads this
+        on every control tick and ``submit`` records it on every arrival —
+        the previous every-key scan was per-arrival work proportional to the
+        number of live (graph, precision, mesh, epoch) streams."""
         if not self._queues:
             return 0.0
         now = self.time_fn() if now is None else now
-        oldest = min(q[0].enqueued_at for q in self._queues.values() if q)
-        return max(0.0, now - oldest)
+        while self._heads:
+            stamp, _, key = self._heads[0]
+            q = self._queues.get(key)
+            if q is not None and q and q[0].enqueued_at == stamp:
+                return max(0.0, now - stamp)
+            heapq.heappop(self._heads)     # stale: head moved or queue died
+        return 0.0
 
     def purge(self, key_predicate, item_predicate=None) -> int:
         """Drop pending queries whose wave key satisfies ``key_predicate``;
@@ -106,7 +136,10 @@ class WaveScheduler:
             kept = [p for p in q if not item_predicate(p.item)]
             dropped += len(q) - len(kept)
             if kept:
+                head_moved = kept[0] is not q[0]
                 self._queues[key] = kept
+                if head_moved:
+                    self._note_head(key)
             else:
                 del self._queues[key]
         self._depth -= dropped
@@ -153,6 +186,7 @@ class WaveScheduler:
         waves: List[Wave] = []
         for key in list(self._queues):
             q = self._queues[key]
+            popped_full = False
             while len(q) >= self.kappa:
                 waves.append(Wave(key, [p.item for p in q[: self.kappa]],
                                   full=True,
@@ -160,6 +194,7 @@ class WaveScheduler:
                                                for p in q[: self.kappa]]))
                 del q[: self.kappa]
                 self._depth -= self.kappa
+                popped_full = True
             if q and now >= min(p.flush_at(self.max_wait) for p in q):
                 waves.append(Wave(key, [p.item for p in q], full=False,
                                   enqueued_at=[p.enqueued_at for p in q]))
@@ -167,6 +202,8 @@ class WaveScheduler:
                 q.clear()
             if not q:
                 del self._queues[key]
+            elif popped_full:          # survivors promoted: new queue head
+                self._note_head(key)
         return waves
 
     def drain(self) -> List[Wave]:

@@ -36,6 +36,7 @@ quality estimates current (paper Figs. 4-6 measured online).
 from __future__ import annotations
 
 import dataclasses
+import random
 import threading
 import time
 import warnings
@@ -50,7 +51,9 @@ from repro.core.fixed_point import PAPER_FORMATS, QFormat, format_for_bits
 from repro.core.metrics import ranking
 from repro.graph_updates.delta import EdgeDelta
 from repro.graph_updates.warmstart import WarmStartStore
-from repro.obs import FlightRecorder, Tracer
+from repro.obs import FlightRecorder, Tracer, fanout_sink
+from repro.obs.otlp import OTLPExporter
+from repro.obs.slo import SLOMonitor, SLOSpec, default_slo_specs
 from repro.ppr_serving.cache import LRUCache
 from repro.ppr_serving.engine import engine_families, engine_for, family_members
 from repro.ppr_serving.futures import PPRFuture, QueryRejected
@@ -155,9 +158,11 @@ class PPRService:
         early_exit: Union[None, bool, ConvergencePolicy] = None,
         warm_start: Union[bool, int] = False,
         prefetch: Union[None, bool, PrefetchConfig] = None,
-        tracing: bool = False,
+        tracing: Union[bool, float] = False,
         reservoir_size: int = 1024,
         time_fn=time.monotonic,
+        slo: Union[None, bool, Sequence[SLOSpec], SLOMonitor] = None,
+        otlp: Optional[OTLPExporter] = None,
     ):
         """``warm_start`` seeds wave iterations from each personalization
         vertex's last converged column (True, or an int store capacity per
@@ -168,10 +173,26 @@ class PPRService:
         ``tracing`` arms per-query/per-wave span traces (completed traces
         land in ``self.recorder``, the flight recorder); off by default —
         the hot path then pays one ``is None`` check per instrumentation
-        point.  The flight recorder itself is always on: control-plane
-        events (deltas, κ moves, shed/SLO transitions) are cheap and are
-        exactly what an incident postmortem needs.  ``reservoir_size``
-        bounds every telemetry percentile sample (see ``ServiceTelemetry``).
+        point.  ``tracing=True`` traces everything (byte-compatible with
+        the pre-sampling behavior); a float in (0, 1) head-samples that
+        fraction of queries with a seeded RNG so tracing can stay armed in
+        production — a sampled-out query costs exactly one RNG draw, and
+        sampled traces carry the rate as a ``sample_rate`` root attribute
+        so an exporter backend can re-weight.  Wave traces are kept
+        whenever any occupant is sampled.  The flight recorder itself is
+        always on: control-plane events (deltas, κ moves, shed/SLO
+        transitions) are cheap and are exactly what an incident postmortem
+        needs.  ``reservoir_size`` bounds every telemetry percentile sample
+        (see ``ServiceTelemetry``).
+
+        ``slo`` arms the burn-rate monitor (``repro.obs.slo``): ``True``
+        for the default spec set, a spec sequence, or a prebuilt
+        ``SLOMonitor`` (its registry must be this service's telemetry
+        registry).  ``otlp`` attaches an ``OTLPExporter``: completed traces
+        fan out to it *beside* the flight recorder, and
+        ``export_telemetry()`` (driven by the serving pump) pushes
+        delta-temporality metrics.  Both default off and keep the zero-cost
+        property — a ``None`` check per query.
         """
         self.kappa = kappa
         self.iterations = iterations
@@ -182,9 +203,31 @@ class PPRService:
         self.cache = LRUCache(cache_capacity)
         self.telemetry = ServiceTelemetry(reservoir_size=reservoir_size)
         self.recorder = FlightRecorder()
+        # tracing=True → rate 1.0 (byte-compatible full tracing); a float is
+        # a head-sampling rate.  bool checked first: True/False are ints.
+        rate = (1.0 if tracing is True else
+                0.0 if tracing is False else float(tracing))
+        if not 0.0 <= rate <= 1.0:
+            raise ValueError(f"tracing rate must be in [0, 1], got {tracing}")
+        self._trace_rate = rate
+        # seeded: a replayed run samples the same queries (and the golden
+        # OTLP snapshot stays stable)
+        self._trace_rng = random.Random(0)
+        self.otlp = otlp
+        if otlp is not None and otlp._mirror is None:
+            otlp.bind_registry(self.telemetry.registry)
+        sink = self.recorder.record_trace if otlp is None else \
+            fanout_sink(self.recorder.record_trace, otlp.record_trace)
         self.tracer: Optional[Tracer] = (
-            Tracer(time_fn=time_fn, sink=self.recorder.record_trace)
-            if tracing else None)
+            Tracer(time_fn=time_fn, sink=sink) if rate > 0.0 else None)
+        if slo is None or slo is False:
+            self.slo: Optional[SLOMonitor] = None
+        elif isinstance(slo, SLOMonitor):
+            self.slo = slo
+        else:
+            specs = default_slo_specs() if slo is True else tuple(slo)
+            self.slo = SLOMonitor(self.telemetry.registry, specs,
+                                  time_fn=time_fn, recorder=self.recorder)
         self.controller = PrecisionController(autotune or AutotuneConfig())
         if early_exit is True:
             self.convergence: Optional[ConvergencePolicy] = ConvergencePolicy()
@@ -457,6 +500,23 @@ class PPRService:
             self.recorder.record_event("slo_recover", self.time_fn())
 
     # ------------------------------------------------------------------
+    def _trace_sampled(self) -> bool:
+        """Head-sampling decision for one query — exactly one seeded RNG
+        draw at rates below 1.0 (the entire per-query cost of a sampled-out
+        query), no draw at full tracing."""
+        return self._trace_rate >= 1.0 or \
+            self._trace_rng.random() < self._trace_rate
+
+    def export_telemetry(self) -> int:
+        """Drive the attached OTLP exporter one cycle (queued span batches +
+        a delta metrics push when due); returns POSTs made, 0 with no
+        exporter.  The serving pump calls this off the event loop; a
+        pump-less embedding can call it from any maintenance loop."""
+        if self.otlp is None:
+            return 0
+        return self.otlp.tick(self.telemetry.registry)
+
+    # ------------------------------------------------------------------
     def _resolve_precision(self, q: PPRQuery) -> str:
         """Concrete precision key for a query; "auto" goes through the ladder."""
         if q.precision == AUTO_KEY:
@@ -521,10 +581,14 @@ class PPRService:
         with self._lock:
             tracer = self.tracer
             tr = None
-            if tracer is not None:
+            if tracer is not None and self._trace_sampled():
                 tr = tracer.start("query", "query", graph=q.graph,
                                   vertex=int(q.vertex), k=int(q.k),
                                   requested=str(q.precision))
+                if self._trace_rate < 1.0:
+                    # recorded on the span so an exporter backend can
+                    # re-weight sampled traces back to traffic rates
+                    tr.attrs["sample_rate"] = self._trace_rate
                 sp = tr.span("resolve_precision", self.time_fn())
             pkey = self._resolve_precision(q)
             if tr is not None:
@@ -541,6 +605,10 @@ class PPRService:
                 sp.end(self.time_fn(), hit=hit is not None)
             if hit is not None:
                 verts, scores = hit
+                # submit-path resolution: the admitted-latency SLO sees the
+                # fast path as (effectively) zero, which it is
+                if not q.prefetch:
+                    self.telemetry.record_query_latency(q.graph, 0.0)
                 fut._resolve(Recommendation(q, verts.copy(), scores.copy(),
                                             source="cache", precision=pkey))
                 if tr is not None:
@@ -758,13 +826,47 @@ class PPRService:
         rg = self._graphs[graph_name]
         fmt = None if pkey == FLOAT_KEY else normalize_precision(pkey)
         t0 = self.time_fn()
+
+        # deadline-aware shed (before any compute is spent): a query whose
+        # admission wait already exceeds its deadline gets a prompt 504, not
+        # a late answer the caller stopped waiting for.  Strictly past-
+        # deadline only (>): a deadline-flushed partial wave launches *at*
+        # the budget boundary and must still serve its occupants.
+        if any(f.query.deadline is not None for f in wave.items):
+            live: List[PPRFuture] = []
+            live_enq: List[float] = []
+            for col, fut in enumerate(wave.items):
+                q = fut.query
+                enq = (wave.enqueued_at[col]
+                       if col < len(wave.enqueued_at) else t0)
+                if q.deadline is not None and t0 - enq > q.deadline:
+                    self.telemetry.record_admission_wait(max(0.0, t0 - enq))
+                    self.telemetry.record_deadline_shed(graph=q.graph)
+                    fut._reject(QueryRejected(
+                        f"query for vertex {q.vertex} on graph {q.graph!r} "
+                        f"waited {t0 - enq:.4f}s in admission, past its "
+                        f"{q.deadline:.4f}s deadline — dropped at wave "
+                        f"launch rather than served late",
+                        code="deadline-exceeded"))
+                    self._finish_rejected(fut, "deadline-exceeded")
+                else:
+                    live.append(fut)
+                    live_enq.append(enq)
+            if not live:
+                return []              # the whole wave expired in the queue
+            wave = dataclasses.replace(wave, items=live, enqueued_at=live_enq)
+
         self._wave_counter += 1
         wave_id = self._wave_counter
 
         tracer = self.tracer
         iterate_info: Dict[str, object] = {}
         wtr = None
-        if tracer is not None:
+        # under head-sampling, a wave trace is kept iff any occupant was
+        # sampled — an unsampled wave must not leak whole-traffic traces
+        if tracer is not None and (
+                self._trace_rate >= 1.0
+                or any(f._trace is not None for f in wave.items)):
             wtr = tracer.start(
                 "wave", "wave", t=t0, wave_id=wave_id, graph=graph_name,
                 precision=pkey, mesh=mesh_key, full=wave.full,
@@ -849,6 +951,15 @@ class PPRService:
                                            precision=pkey))
             t_resolve = self.time_fn()
             self.telemetry.record_stage("resolve", t_resolve - t_topk)
+            # per-occupant end-to-end latency (submit → resolution): the
+            # distribution the latency SLO evaluates.  Synthetic prefetch
+            # queries are cache warming, not traffic — they don't count.
+            for col, fut in enumerate(wave.items):
+                if not fut.query.prefetch:
+                    enq = (wave.enqueued_at[col]
+                           if col < len(wave.enqueued_at) else t0)
+                    self.telemetry.record_query_latency(
+                        graph_name, max(0.0, t_resolve - enq))
             self.telemetry.record_wave(len(wave.items), self.kappa, latency,
                                        pkey, mesh_key=mesh_key,
                                        engine=plan.engine, graph=graph_name)

@@ -180,6 +180,20 @@ class ServiceTelemetry:
             "ppr_queries_shed_total",
             "Arrivals rejected by admission (429), per graph.",
             labels=("graph",))
+        self._queries_deadline_shed = r.counter(
+            "ppr_queries_deadline_shed_total",
+            "Queries dropped at wave launch: admission wait already past "
+            "their deadline (504), per graph.", labels=("graph",))
+        # end-to-end admitted-query latency (submit → resolution), the
+        # distribution the latency SLO evaluates; cache hits land as ~0
+        self._query_latency = r.histogram(
+            "ppr_query_latency_seconds",
+            "Admitted-query latency, submit to resolution, per graph.",
+            labels=("graph",))
+        self._slo_advisory = r.counter(
+            "ppr_slo_advisory_total",
+            "Admission-ladder moves advised by SLO burn rather than queue "
+            "depth (deepen/degrade/veto).", labels=("action",))
         self._shed_engaged = r.counter("ppr_shed_engaged_total",
                                        "High-water crossings (entering shed).")
         self._shed_recovered = r.counter("ppr_shed_recovered_total",
@@ -330,6 +344,23 @@ class ServiceTelemetry:
     def record_shed(self, graph: str = UNATTRIBUTED) -> None:
         """One arriving query rejected by admission control (HTTP 429)."""
         self._queries_shed.labels(graph=graph).inc()
+
+    def record_deadline_shed(self, graph: str = UNATTRIBUTED) -> None:
+        """One query dropped at wave launch because its admission wait had
+        already exceeded its deadline (HTTP 504) — serving it late would
+        burn compute on an answer the caller stopped waiting for."""
+        self._queries_deadline_shed.labels(graph=graph).inc()
+
+    def record_query_latency(self, graph: str, seconds: float) -> None:
+        """One admitted query's submit → resolution latency (cache hits
+        record ~0) — the distribution the latency SLO is evaluated over."""
+        self._query_latency.labels(graph=graph).observe(seconds)
+
+    def record_slo_advisory(self, action: str) -> None:
+        """The SLO monitor steered the admission ladder: ``deepen`` /
+        ``degrade`` pushed by burn, or ``veto`` (quality burning blocked a
+        degrade that queue depth alone would have taken)."""
+        self._slo_advisory.labels(action=action).inc()
 
     def record_shed_transition(self, engaged: bool) -> None:
         """Load shedding switched on (high-water crossed) or off (drained
@@ -500,6 +531,18 @@ class ServiceTelemetry:
         return self._labeled(self._queries_shed)
 
     @property
+    def queries_deadline_shed(self) -> int:
+        return self._family_total(self._queries_deadline_shed)
+
+    @property
+    def queries_deadline_shed_by_graph(self) -> Dict[str, int]:
+        return self._labeled(self._queries_deadline_shed)
+
+    @property
+    def slo_advisories(self) -> Dict[str, int]:
+        return self._labeled(self._slo_advisory)
+
+    @property
     def shed_engaged_events(self) -> int:
         return int(self._shed_engaged.get().value)
 
@@ -569,6 +612,7 @@ class ServiceTelemetry:
             "oldest_wait_s": self.oldest_wait_last_s,
             "oldest_wait_peak_s": self.oldest_wait_peak_s,
             "queries_shed": self.queries_shed,
+            "queries_deadline_shed": self.queries_deadline_shed,
             "shed_engaged_events": self.shed_engaged_events,
             "shed_recovered_events": self.shed_recovered_events,
             "slo_degrade_events": self.slo_degrade_events,

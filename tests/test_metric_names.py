@@ -22,12 +22,19 @@ MANIFEST = os.path.join(os.path.dirname(os.path.abspath(__file__)),
 def build_manifest() -> str:
     from repro.ppr_serving.telemetry import ServiceTelemetry
 
+    from repro.obs import OTLPExporter, SLOMonitor, default_slo_specs
+
     registry = ServiceTelemetry().registry
     # the pump registers its heartbeat counters against the same registry at
     # construction; declare them here so the manifest covers the full stack
     registry.counter("ppr_pump_cycles_total", "Pump heartbeat cycles run.")
     registry.counter("ppr_pump_waves_launched_total",
                      "Waves launched from pump cycles (incl. the stop flush).")
+    # the SLO monitor and OTLP exporter register their slo_*/otlp_* families
+    # against the same registry when attached (PPRService(slo=..., otlp=...))
+    SLOMonitor(registry, default_slo_specs())
+    OTLPExporter("http://localhost:4318", transport=lambda url, body: None,
+                 registry=registry)
 
     lines = [
         "# Metric families of the PPR serving stack (generated — do not edit).",

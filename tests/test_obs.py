@@ -399,3 +399,54 @@ def test_e2e_http_trace_and_prometheus_wire(graph):
     assert q["trace_id"] in w["root"]["attrs"]["member_traces"]
     it = dict(w["root"]["children"][2]["attrs"])
     assert it["iterations_run"] == 4 and it["budget"] == 4
+
+
+# ---------------------------------------------------------------------------
+# trace head-sampling (PPRService(tracing=<rate>))
+# ---------------------------------------------------------------------------
+def test_tracing_accepts_bool_and_rate_and_validates(graph):
+    assert PPRService(kappa=2, iterations=2, tracing=False).tracer is None
+    assert PPRService(kappa=2, iterations=2, tracing=0.0).tracer is None
+    assert PPRService(kappa=2, iterations=2, tracing=True).tracer is not None
+    assert PPRService(kappa=2, iterations=2, tracing=0.5).tracer is not None
+    for bad in (-0.1, 1.5):
+        with pytest.raises(ValueError):
+            PPRService(kappa=2, iterations=2, tracing=bad)
+
+
+def test_head_sampling_traces_a_seeded_subset(graph):
+    """tracing=0.5 head-samples per query with a seeded RNG: a deterministic
+    subset of queries carries traces, each tagged with the decision rate;
+    sampled-out queries pay one RNG draw and record nothing."""
+    svc = PPRService(kappa=2, iterations=3, max_wait=100.0, tracing=0.5)
+    svc.register_graph("g", graph, formats=[16])
+    n = 12
+    for v in range(n):
+        svc.submit(PPRQuery("g", v, k=4, precision="Q1.15"))
+    svc.flush()
+    queries = [t for t in svc.recorder.traces() if t["kind"] == "query"]
+    assert 0 < len(queries) < n            # a strict subset at rate 0.5
+    assert all(t["root"]["attrs"]["sample_rate"] == 0.5 for t in queries)
+    # deterministic across runs: same seed, same subset
+    svc2 = PPRService(kappa=2, iterations=3, max_wait=100.0, tracing=0.5)
+    svc2.register_graph("g", graph, formats=[16])
+    for v in range(n):
+        svc2.submit(PPRQuery("g", v, k=4, precision="Q1.15"))
+    svc2.flush()
+    verts = lambda s: [t["root"]["attrs"]["vertex"]
+                       for t in s.recorder.traces()
+                       if t["kind"] == "query"]
+    assert verts(svc) == verts(svc2)
+
+
+def test_tracing_true_still_traces_every_query_without_rate_attr(graph):
+    """The bool API is byte-compatible: tracing=True samples everything and
+    adds no sample_rate attribute (pre-sampling trace dicts round-trip)."""
+    svc = PPRService(kappa=2, iterations=3, max_wait=100.0, tracing=True)
+    svc.register_graph("g", graph, formats=[16])
+    for v in range(4):
+        svc.submit(PPRQuery("g", v, k=4, precision="Q1.15"))
+    svc.flush()
+    queries = [t for t in svc.recorder.traces() if t["kind"] == "query"]
+    assert len(queries) == 4
+    assert all("sample_rate" not in t["root"]["attrs"] for t in queries)

@@ -1,0 +1,341 @@
+"""OTLP/HTTP exporter: span/metric payload encoding against a committed
+golden fixture (byte-determinism is the contract — trace/span ids derive from
+the tracer's monotone ids, keys are sorted), delta temporality across pushes,
+bounded-queue overflow, retry/backoff + drop accounting, the ``due``/``tick``
+/``flush`` cadence, and the fan-out sink (export beside the flight recorder,
+never instead of it).
+
+Regenerate the fixture after an *intentional* wire-format change:
+
+    PYTHONPATH=src python tests/test_otlp.py --write
+"""
+import json
+import os
+import sys
+
+import pytest
+
+from repro.obs import (
+    FlightRecorder,
+    MetricsRegistry,
+    OTLPExporter,
+    Tracer,
+    fanout_sink,
+)
+
+GOLDEN = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                      "otlp_golden.json")
+
+
+class FakeClock:
+    def __init__(self, t=0.0):
+        self.t = t
+
+    def __call__(self):
+        return self.t
+
+
+class CaptureTransport:
+    """The injectable send seam: records (url, decoded payload); optionally
+    fails the first ``fail_first`` sends to drive the retry path."""
+
+    def __init__(self, fail_first=0):
+        self.sent = []
+        self.fail_first = fail_first
+        self.attempts = 0
+
+    def __call__(self, url, body):
+        self.attempts += 1
+        if self.attempts <= self.fail_first:
+            raise ConnectionError("collector unreachable")
+        self.sent.append((url, json.loads(body.decode("utf-8"))))
+
+
+def _exporter(clk, transport, **kw):
+    kw.setdefault("flush_interval_s", 5.0)
+    kw.setdefault("backoff_s", 0.0)        # no real sleeps in tests
+    return OTLPExporter("http://collector:4318", transport=transport,
+                        time_fn=clk, **kw)
+
+
+def _golden_scenario():
+    """One deterministic export cycle: a two-level trace plus one delta
+    metrics push over a small registry exercising every instrument kind."""
+    clk = FakeClock()
+    transport = CaptureTransport()
+    exp = _exporter(clk, transport)
+    tracer = Tracer(time_fn=clk, sink=exp.record_trace)
+
+    tr = tracer.start("query", "query", graph="g", vertex=7, sampled=True)
+    clk.t = 0.25
+    sp = tr.span("wave", clk(), kappa=4)
+    clk.t = 0.75
+    sp.child("resolve", clk(), precision=26).end(0.875)
+    sp.end(1.0)
+    clk.t = 2.0
+    tracer.finish(tr, outcome="resolved", scores=(0.5, 0.25))
+
+    reg = MetricsRegistry()
+    c = reg.counter("requests_total", "Requests.", labels=("route",))
+    c.labels(route="/v1/ppr").inc(3)
+    c.labels(route="/v1/metrics").inc()
+    g = reg.gauge("queue_depth", "Pending queries.")
+    g.get().set(5.0)
+    g.get().set(2.0)
+    h = reg.histogram("wait_seconds", "Admission wait.",
+                      bounds=(0.001, 0.01, 0.1))
+    for v in (0.0005, 0.05, 0.05, 2.0):
+        h.get().observe(v)
+    r = reg.reservoir("wave_ms", "Wave latency.", size=8)
+    for v in (1.0, 2.0, 3.0, 4.0):
+        r.get().add(v)
+
+    clk.t = 6.0                            # past the flush interval
+    posts = exp.tick(reg)
+    return exp, transport, posts
+
+
+def build_golden() -> str:
+    _, transport, _ = _golden_scenario()
+    return json.dumps(
+        [{"url": url, "payload": payload} for url, payload in transport.sent],
+        indent=2, sort_keys=True) + "\n"
+
+
+# ---------------------------------------------------------------------------
+# the golden snapshot
+# ---------------------------------------------------------------------------
+def test_payloads_match_committed_golden_fixture():
+    got = build_golden()
+    with open(GOLDEN, encoding="utf-8") as fh:
+        want = fh.read()
+    assert got == want, (
+        "OTLP wire payloads changed. If intentional, regenerate with:\n"
+        "  PYTHONPATH=src python tests/test_otlp.py --write")
+
+
+def test_golden_scenario_shape():
+    """Sanity on the fixture's structure, independent of exact bytes."""
+    exp, transport, posts = _golden_scenario()
+    assert posts == 2                      # one span batch + one metric push
+    (turl, tpayload), (murl, mpayload) = transport.sent
+    assert turl.endswith("/v1/traces") and murl.endswith("/v1/metrics")
+
+    spans = tpayload["resourceSpans"][0]["scopeSpans"][0]["spans"]
+    assert [s["name"] for s in spans] == ["query", "wave", "resolve"]
+    root, wave, resolve = spans
+    assert root["traceId"] == f"{1:032x}"
+    assert root["spanId"] == f"{1 << 16:016x}"
+    assert "parentSpanId" not in root
+    assert wave["parentSpanId"] == root["spanId"]
+    assert resolve["parentSpanId"] == wave["spanId"]
+    assert root["startTimeUnixNano"] == "0"
+    assert root["endTimeUnixNano"] == str(2 * 10**9)
+    attrs = {a["key"]: a["value"] for a in root["attributes"]}
+    assert attrs["trace.kind"] == {"stringValue": "query"}
+    assert attrs["sampled"] == {"boolValue": True}   # bool, not int 1
+    assert attrs["vertex"] == {"intValue": "7"}
+    assert attrs["scores"]["arrayValue"]["values"] == \
+        [{"doubleValue": 0.5}, {"doubleValue": 0.25}]
+
+    metrics = {m["name"]: m
+               for m in mpayload["resourceMetrics"][0]
+               ["scopeMetrics"][0]["metrics"]}
+    assert metrics["requests_total"]["sum"]["aggregationTemporality"] == 1
+    assert metrics["requests_total"]["sum"]["isMonotonic"] is True
+    assert metrics["queue_depth"]["gauge"]["dataPoints"][0]["asDouble"] == 2.0
+    assert metrics["queue_depth_peak"]["gauge"]["dataPoints"][0] \
+        ["asDouble"] == 5.0
+    hist = metrics["wait_seconds"]["histogram"]
+    assert hist["aggregationTemporality"] == 1
+    dp = hist["dataPoints"][0]
+    assert dp["count"] == "4" and dp["bucketCounts"] == ["1", "0", "2", "1"]
+    summ = metrics["wave_ms"]["summary"]["dataPoints"][0]
+    assert summ["count"] == "4"
+    assert [q["quantile"] for q in summ["quantileValues"]] == [0.5, 0.95, 0.99]
+
+
+# ---------------------------------------------------------------------------
+# delta temporality
+# ---------------------------------------------------------------------------
+def test_counters_and_histograms_push_deltas_not_totals():
+    clk = FakeClock()
+    transport = CaptureTransport()
+    exp = _exporter(clk, transport)
+    reg = MetricsRegistry()
+    c = reg.counter("hits_total", "Hits.")
+    h = reg.histogram("lat", "Latency.", bounds=(1.0, 2.0))
+
+    c.get().inc(10)
+    h.get().observe(0.5)
+    clk.t = 5.0
+    exp.tick(reg)
+    c.get().inc(4)                         # 14 cumulative, 4 new
+    h.get().observe(1.5)
+    clk.t = 10.0
+    exp.tick(reg)
+
+    def metric(i, name):
+        ms = transport.sent[i][1]["resourceMetrics"][0]["scopeMetrics"][0][
+            "metrics"]
+        return next(m for m in ms if m["name"] == name)
+
+    assert metric(0, "hits_total")["sum"]["dataPoints"][0]["asDouble"] == 10.0
+    assert metric(1, "hits_total")["sum"]["dataPoints"][0]["asDouble"] == 4.0
+    assert metric(1, "lat")["histogram"]["dataPoints"][0]["bucketCounts"] == \
+        ["0", "1", "0"]
+    # the delta window's start advances to the previous push
+    dp = metric(1, "hits_total")["sum"]["dataPoints"][0]
+    assert dp["startTimeUnixNano"] == str(5 * 10**9)
+    assert dp["timeUnixNano"] == str(10 * 10**9)
+
+
+def test_metric_push_cadence_respects_flush_interval():
+    clk = FakeClock()
+    transport = CaptureTransport()
+    exp = _exporter(clk, transport, flush_interval_s=5.0)
+    reg = MetricsRegistry()
+    assert exp.due(0.0)                    # first push is always owed
+    assert exp.tick(reg, now=0.0) == 1
+    assert not exp.due(3.0)
+    assert exp.tick(reg, now=3.0) == 0     # interval not elapsed: no POST
+    assert exp.due(5.0)
+    assert exp.tick(reg, now=5.0) == 1
+    # flush forces a push regardless of the interval
+    assert exp.flush(reg, now=5.5) == 1
+    assert exp.stats()["metric_pushes"] == 3
+
+
+# ---------------------------------------------------------------------------
+# failure policy: bounded queue, retries, drop accounting
+# ---------------------------------------------------------------------------
+def test_span_queue_drops_oldest_past_capacity():
+    clk = FakeClock()
+    transport = CaptureTransport()
+    exp = _exporter(clk, transport, queue_capacity=3)
+    tracer = Tracer(time_fn=clk, sink=exp.record_trace)
+    for i in range(5):                     # 5 single-span traces
+        tracer.finish(tracer.start("query", f"q{i}"))
+    s = exp.stats()
+    assert s["queue_depth"] == 3 and s["spans_dropped"] == 2
+    assert s["spans_queued"] == 5
+    exp.tick()
+    # the survivors are the *newest* three (fresh beats stale)
+    (_, payload), = transport.sent
+    names = [s["name"] for s in
+             payload["resourceSpans"][0]["scopeSpans"][0]["spans"]]
+    assert names == ["q2", "q3", "q4"]
+
+
+def test_send_retries_then_succeeds():
+    clk = FakeClock()
+    slept = []
+    transport = CaptureTransport(fail_first=2)
+    exp = OTLPExporter("http://c:4318", transport=transport, time_fn=clk,
+                       max_retries=2, backoff_s=0.1,
+                       sleep_fn=slept.append)
+    tracer = Tracer(time_fn=clk, sink=exp.record_trace)
+    tracer.finish(tracer.start("query", "q"))
+    exp.tick()
+    s = exp.stats()
+    assert s["spans_exported"] == 1 and s["span_batches_sent"] == 1
+    assert s["send_retries"] == 2 and s["send_failures"] == 0
+    assert slept == [0.1, 0.2]             # exponential backoff
+
+
+def test_exhausted_retries_drop_the_batch_and_count_failures():
+    clk = FakeClock()
+    transport = CaptureTransport(fail_first=99)
+    exp = OTLPExporter("http://c:4318", transport=transport, time_fn=clk,
+                       max_retries=1, backoff_s=0.0)
+    tracer = Tracer(time_fn=clk, sink=exp.record_trace)
+    tracer.finish(tracer.start("query", "q"))
+    exp.tick()
+    s = exp.stats()
+    assert s["send_failures"] == 1 and s["spans_dropped"] == 1
+    assert s["spans_exported"] == 0 and s["queue_depth"] == 0
+
+
+def test_failed_metric_push_advances_the_window_without_double_report():
+    clk = FakeClock()
+    transport = CaptureTransport(fail_first=1)
+    exp = OTLPExporter("http://c:4318", transport=transport, time_fn=clk,
+                       max_retries=0, backoff_s=0.0, flush_interval_s=5.0)
+    reg = MetricsRegistry()
+    c = reg.counter("hits_total", "Hits.")
+    c.get().inc(7)
+    exp.tick(reg, now=5.0)                 # POST fails: window dropped
+    assert exp.stats()["send_failures"] == 1
+    c.get().inc(2)
+    exp.tick(reg, now=10.0)                # only the *new* delta reports
+    ms = transport.sent[0][1]["resourceMetrics"][0]["scopeMetrics"][0][
+        "metrics"]
+    dp = next(m for m in ms if m["name"] == "hits_total")["sum"]["dataPoints"]
+    assert dp[0]["asDouble"] == 2.0        # the failed window's 7 is lost
+    assert dp[0]["startTimeUnixNano"] == str(5 * 10**9)
+
+
+def test_span_batching_splits_at_max_batch():
+    clk = FakeClock()
+    transport = CaptureTransport()
+    exp = _exporter(clk, transport, max_batch=2)
+    tracer = Tracer(time_fn=clk, sink=exp.record_trace)
+    for i in range(5):
+        tracer.finish(tracer.start("query", f"q{i}"))
+    exp.tick()
+    trace_posts = [p for url, p in transport.sent if url.endswith("/traces")]
+    sizes = [len(p["resourceSpans"][0]["scopeSpans"][0]["spans"])
+             for p in trace_posts]
+    assert sizes == [2, 2, 1]
+    assert exp.stats()["span_batches_sent"] == 3
+
+
+# ---------------------------------------------------------------------------
+# registry mirror + fan-out
+# ---------------------------------------------------------------------------
+def test_bound_registry_mirrors_exporter_counters():
+    clk = FakeClock()
+    reg = MetricsRegistry()
+    exp = _exporter(clk, CaptureTransport(), registry=reg)
+    tracer = Tracer(time_fn=clk, sink=exp.record_trace)
+    tracer.finish(tracer.start("query", "q"))
+    exp.tick()
+    assert reg.counter("otlp_spans_queued_total").get().value == 1
+    assert reg.counter("otlp_spans_exported_total").get().value == 1
+    assert reg.counter("otlp_batches_sent_total").get().value == 1
+
+
+def test_fanout_sink_feeds_recorder_and_exporter():
+    clk = FakeClock()
+    rec = FlightRecorder()
+    exp = _exporter(clk, CaptureTransport())
+    tracer = Tracer(time_fn=clk,
+                    sink=fanout_sink(rec.record_trace, exp.record_trace))
+    tracer.finish(tracer.start("query", "q", vertex=3))
+    assert len(rec.traces()) == 1          # the local record survives
+    assert exp.stats()["spans_queued"] == 1
+    # single/None composition collapses to the sink itself (no wrapper)
+    append = [].append
+    assert fanout_sink(append) is append
+    assert fanout_sink(None, append, None) is append
+
+
+@pytest.mark.parametrize("kw", [
+    dict(flush_interval_s=0.0),
+    dict(max_batch=0),
+    dict(queue_capacity=0),
+    dict(max_retries=-1),
+    dict(backoff_s=-0.1),
+])
+def test_exporter_validation_rejects(kw):
+    with pytest.raises(ValueError):
+        OTLPExporter("http://c:4318", **kw)
+
+
+if __name__ == "__main__":
+    if "--write" in sys.argv:
+        with open(GOLDEN, "w", encoding="utf-8") as fh:
+            fh.write(build_golden())
+        print(f"wrote {GOLDEN}")
+    else:
+        print(__doc__)

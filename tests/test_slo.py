@@ -1,0 +1,530 @@
+"""SLO burn-rate monitoring: multi-window engage/recover state machine on an
+injected clock (hysteresis, no flapping at the boundary), the three SLO kinds'
+good/bad accounting, the admission controller's push/veto advisory coupling,
+deadline-aware shedding (service + HTTP 504), and an end-to-end wire test —
+a paused-pump flood drives the latency SLO to *burning*, visible in
+``GET /v1/slo``, the flight recorder, and ``slo_burn_rate`` in
+``GET /v1/metrics``."""
+import asyncio
+
+import pytest
+
+from repro.graphs import holme_kim_powerlaw
+from repro.obs import MetricsRegistry, FlightRecorder, SLOMonitor, SLOSpec, \
+    default_slo_specs, format_slo
+from repro.obs.slo import (
+    DEADLINE_SHED_FAMILY,
+    LATENCY_FAMILY,
+    QUALITY_FAMILY,
+    SERVED_FAMILY,
+    SHED_FAMILY,
+)
+from repro.ppr_serving import (
+    AdmissionConfig,
+    AdmissionController,
+    PPRHTTPServer,
+    PPRQuery,
+    PPRService,
+    QueryRejected,
+)
+from repro.ppr_serving.http import http_request
+
+
+class FakeClock:
+    def __init__(self, t=0.0):
+        self.t = t
+
+    def __call__(self):
+        return self.t
+
+
+#: bench-scale window set reused across the unit tests: the SRE algebra does
+#: not care about absolute durations, only the short/long pairing
+FAST = (5.0, 30.0)
+SLOW = (30.0, 120.0)
+
+
+def _spec(kind="latency", **kw):
+    kw.setdefault("name", f"{kind}_slo")
+    kw.setdefault("fast_windows", FAST)
+    kw.setdefault("slow_windows", SLOW)
+    if kind == "latency":
+        kw.setdefault("objective", 0.001024)       # a bucket bound (2^10 µs)
+    if kind == "quality":
+        kw.setdefault("objective", 0.90)
+    kw.setdefault("budget", 0.05)
+    return SLOSpec(kind=kind, **kw)
+
+
+def _monitor(spec, recorder=None, resolution_s=1.0):
+    reg = MetricsRegistry()
+    mon = SLOMonitor(reg, [spec], time_fn=FakeClock(), recorder=recorder,
+                     resolution_s=resolution_s)
+    return reg, mon
+
+
+def _observe_latency(reg, seconds, n=1, graph="g"):
+    hist = reg.histogram(LATENCY_FAMILY, labels=("graph",))
+    for _ in range(n):
+        hist.labels(graph=graph).observe(seconds)
+
+
+# ---------------------------------------------------------------------------
+# spec validation + defaults
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("kw", [
+    dict(name=""),
+    dict(kind="throughput"),
+    dict(budget=0.0),
+    dict(budget=1.5),
+    dict(kind="latency", objective=0.0),
+    dict(kind="quality", objective=1.5),
+    dict(fast_windows=(30.0, 5.0)),
+    dict(slow_windows=(0.0, 120.0)),
+    dict(fast_burn=2.0, slow_burn=6.0),            # fast < slow
+    dict(recover_burn=0.0),
+    dict(min_events=0),
+])
+def test_spec_validation_rejects(kw):
+    base = dict(name="s", kind="latency", objective=0.25)
+    base.update(kw)
+    with pytest.raises(ValueError):
+        SLOSpec(**base)
+
+
+def test_default_specs_cover_all_kinds():
+    specs = default_slo_specs()
+    assert [s.kind for s in specs] == ["latency", "shed", "quality"]
+    assert all(s.fast_burn >= s.slow_burn > s.recover_burn for s in specs)
+    # distinct window lengths, ascending, shared bound deduplicated
+    assert specs[0].windows == (300.0, 3600.0, 21600.0)
+
+
+def test_monitor_rejects_empty_and_duplicate_specs():
+    reg = MetricsRegistry()
+    with pytest.raises(ValueError):
+        SLOMonitor(reg, [])
+    with pytest.raises(ValueError):
+        SLOMonitor(reg, [_spec(), _spec()])
+
+
+# ---------------------------------------------------------------------------
+# burn-rate engage: multi-window AND semantics
+# ---------------------------------------------------------------------------
+def test_flood_right_after_boot_engages_without_history():
+    """Partial-window evaluation: with no samples older than any window, the
+    oldest sample is the baseline, so a boot-time flood alerts immediately
+    instead of waiting an hour of history."""
+    rec = FlightRecorder()
+    reg, mon = _monitor(_spec("latency"), recorder=rec)
+    mon.tick(0.0)                          # boot baseline (burn 0 by design)
+    assert mon.states() == {"latency_slo": "ok"}
+    _observe_latency(reg, 0.5, n=10)       # all above the 1.024 ms objective
+    mon.tick(1.0)
+    assert mon.states() == {"latency_slo": "burning"}
+    assert mon.burning_kinds() == frozenset({"latency"})
+    events = rec.events_of_kind("slo_burning")
+    assert len(events) == 1
+    assert events[0]["slo"] == "latency_slo"
+    assert events[0]["burn_fast"] == pytest.approx(20.0)   # 1.0 / 0.05
+
+
+def test_engage_requires_both_windows_of_a_pair():
+    """A short spike that has aged out of the *short* fast window no longer
+    engages, even while the long fast window still carries it — both windows
+    of a pair must exceed the threshold (the workbook's AND)."""
+    reg, mon = _monitor(_spec("latency"))
+    mon.tick(0.0)
+    _observe_latency(reg, 0.5, n=10)       # bad burst at t≈1
+    mon.tick(1.0)
+    assert mon.states()["latency_slo"] == "burning"
+    # drown the *short* windows in good traffic: burn in the 5 s and 30 s
+    # windows collapses; the 120 s window still remembers the burst
+    for t in range(2, 60):
+        _observe_latency(reg, 0.0001, n=50)
+        mon.tick(float(t))
+    st = mon.status()["specs"][0]
+    assert st["state"] == "ok"             # recovered despite 120 s burn > 0
+    assert st["windows"]["120"]["burn_rate"] > 0.0
+    assert st["windows"]["5"]["burn_rate"] < 1.0
+
+
+def test_recovery_has_hysteresis_and_does_not_flap_at_the_boundary():
+    """Hold the bad fraction between the recover and engage thresholds: burn
+    ≈ 5 in every window (above recover=1, below fast=14 and slow=6).  The
+    alert must neither re-engage nor recover — exactly one transition."""
+    rec = FlightRecorder()
+    reg, mon = _monitor(_spec("latency"), recorder=rec)
+    mon.tick(0.0)
+    _observe_latency(reg, 0.5, n=20)       # engage hard
+    mon.tick(1.0)
+    assert mon.states()["latency_slo"] == "burning"
+    # steady state: 1 bad per 3 good → frac 0.25 → burn 5.0
+    for t in range(2, 200):
+        _observe_latency(reg, 0.5, n=1)
+        _observe_latency(reg, 0.0001, n=3)
+        mon.tick(float(t))
+    st = mon.status()["specs"][0]
+    assert st["state"] == "burning"        # burn 5 ≥ recover threshold 1
+    assert st["transitions"] == 1          # never flapped
+    assert 4.0 < st["windows"]["5"]["burn_rate"] < 6.5
+    assert rec.events_of_kind("slo_recovered") == []
+    # now stop the bad traffic entirely: recovery once short windows drain
+    for t in range(200, 360):
+        _observe_latency(reg, 0.0001, n=3)
+        mon.tick(float(t))
+    st = mon.status()["specs"][0]
+    assert st["state"] == "ok"
+    assert st["transitions"] == 2          # one engage + one recover, total
+    assert len(rec.events_of_kind("slo_recovered")) == 1
+
+
+def test_burn_gauges_and_transition_counters_exported():
+    reg, mon = _monitor(_spec("latency"))
+    mon.tick(0.0)
+    _observe_latency(reg, 0.5, n=10)
+    mon.tick(1.0)
+    burn = reg.gauge("slo_burn_rate", labels=("slo", "window"))
+    assert burn.labels(slo="latency_slo", window="5").value == \
+        pytest.approx(20.0)
+    state = reg.gauge("slo_state", labels=("slo",))
+    assert state.labels(slo="latency_slo").value == 1.0
+    trans = reg.counter("slo_transitions_total", labels=("slo", "state"))
+    assert trans.labels(slo="latency_slo", state="burning").value == 1
+    assert reg.counter("slo_ticks_total").get().value == 2
+    # the human rendering carries the same story
+    text = format_slo(mon.status())
+    assert "burning: latency_slo" in text and "latency_slo" in text
+
+
+def test_min_events_suppresses_empty_window_noise():
+    reg, mon = _monitor(_spec("latency", min_events=5))
+    mon.tick(0.0)
+    _observe_latency(reg, 0.5, n=4)        # 4 bad events < min_events=5
+    mon.tick(1.0)
+    st = mon.status()["specs"][0]
+    assert st["state"] == "ok"
+    assert st["windows"]["5"]["burn_rate"] == 0.0
+    _observe_latency(reg, 0.5, n=1)        # the 5th crosses the floor
+    mon.tick(2.0)
+    assert mon.states()["latency_slo"] == "burning"
+
+
+# ---------------------------------------------------------------------------
+# the three kinds' good/bad accounting
+# ---------------------------------------------------------------------------
+def test_latency_objective_resolves_at_bucket_granularity():
+    """Observations at/below the largest bucket bound ≤ objective are good;
+    anything past it is bad — no interpolation, never over-counting good."""
+    reg, mon = _monitor(_spec("latency", objective=0.001024))
+    mon.tick(0.0)
+    _observe_latency(reg, 0.001, n=7)      # lands in the ≤1.024 ms bucket
+    _observe_latency(reg, 0.002, n=3)      # past it
+    mon.tick(1.0)
+    st = mon.status()["specs"][0]
+    assert (st["good_total"], st["bad_total"]) == (7.0, 3.0)
+    assert st["windows"]["5"]["bad_fraction"] == pytest.approx(0.3)
+
+
+def test_shed_kind_counts_both_shed_flavors_against_served():
+    reg, mon = _monitor(_spec("shed"))
+    served = reg.counter(SERVED_FAMILY, labels=("graph",))
+    shed = reg.counter(SHED_FAMILY, labels=("graph",))
+    late = reg.counter(DEADLINE_SHED_FAMILY, labels=("graph",))
+    mon.tick(0.0)
+    served.labels(graph="g").inc(6)
+    shed.labels(graph="g").inc(3)
+    late.labels(graph="g").inc(1)
+    mon.tick(1.0)
+    st = mon.status()["specs"][0]
+    assert (st["good_total"], st["bad_total"]) == (6.0, 4.0)
+    assert st["state"] == "burning"        # 40%% shed vs a 5%% budget
+
+
+def test_shed_kind_graph_scoping():
+    reg, mon = _monitor(_spec("shed", graph="a"))
+    served = reg.counter(SERVED_FAMILY, labels=("graph",))
+    shed = reg.counter(SHED_FAMILY, labels=("graph",))
+    mon.tick(0.0)
+    served.labels(graph="a").inc(10)
+    shed.labels(graph="b").inc(50)         # someone else's pain
+    mon.tick(1.0)
+    st = mon.status()["specs"][0]
+    assert st["bad_total"] == 0.0 and st["state"] == "ok"
+
+
+def test_quality_kind_scores_below_floor_are_bad():
+    reg, mon = _monitor(_spec("quality", objective=0.90, budget=0.02))
+    from repro.obs.slo import _UNIT_BUCKETS
+    hist = reg.histogram(QUALITY_FAMILY, bounds=_UNIT_BUCKETS)
+    mon.tick(0.0)
+    for v in (0.95, 0.92, 0.97):           # at/above the floor: good
+        hist.get().observe(v)
+    for v in (0.40, 0.70):                 # below: bad
+        hist.get().observe(v)
+    mon.tick(1.0)
+    st = mon.status()["specs"][0]
+    assert (st["good_total"], st["bad_total"]) == (3.0, 2.0)
+    assert st["state"] == "burning"        # frac 0.4 / budget 0.02 = burn 20
+    assert mon.burning_kinds() == frozenset({"quality"})
+
+
+def test_sample_ring_is_pruned_to_the_longest_window():
+    reg, mon = _monitor(_spec("latency"), resolution_s=1.0)
+    for t in range(500):
+        mon.tick(float(t))
+    ring = mon._states["latency_slo"].samples
+    # 120 s horizon at 1 s resolution: ~window/resolution entries, not O(t)
+    assert len(ring) <= 123
+
+
+# ---------------------------------------------------------------------------
+# admission controller coupling: push + veto advisories
+# ---------------------------------------------------------------------------
+class _StubSLO:
+    """Dialable burning-kinds signal, monitor-shaped."""
+
+    def __init__(self):
+        self.kinds = frozenset()
+        self.ticks = 0
+
+    def tick(self, now=None):
+        self.ticks += 1
+
+    def burning_kinds(self):
+        return self.kinds
+
+    def burning(self):
+        return sorted(self.kinds)
+
+
+class _StubService:
+    def __init__(self, kappa=4):
+        self.kappa = kappa
+        self.depth = 0
+        self.degraded = None
+        from repro.ppr_serving.telemetry import ServiceTelemetry
+        self.telemetry = ServiceTelemetry()
+        self.recorder = FlightRecorder()
+        self.time_fn = FakeClock()
+
+    def queue_depth(self):
+        return self.depth
+
+    def oldest_wait_s(self, now=None):
+        return 0.0
+
+    def set_kappa(self, kappa):
+        self.kappa = kappa
+
+    def degrade_quality(self, target):
+        self.degraded = target
+
+    def restore_quality(self):
+        self.degraded = None
+
+
+def test_latency_burn_pushes_the_ladder_ahead_of_depth():
+    svc, slo = _StubService(kappa=4), _StubSLO()
+    ctl = AdmissionController(svc, AdmissionConfig(
+        high_water=64, low_water=16, deepen_water=16, kappa_max=32,
+        degrade_water=32, degrade_low_water=8), slo=slo)
+    ctl.tick(0.0)
+    assert svc.kappa == 4 and svc.degraded is None and slo.ticks == 1
+
+    slo.kinds = frozenset({"latency"})     # burn engages while depth is 0
+    ctl.tick(1.0)
+    assert svc.kappa == 8                  # deepened to the first rung
+    assert svc.degraded is not None        # quality ceiling engaged
+    assert svc.telemetry.slo_advisories == {"deepen": 1, "degrade": 1}
+    kinds = [e["kind"] for e in svc.recorder.events(10)]
+    assert kinds.count("slo_advisory") == 2
+
+    # recovery is held while the burn persists, even with an empty queue...
+    ctl.tick(2.0)
+    assert svc.degraded is not None
+    # ...and releases once the SLO recovers
+    slo.kinds = frozenset()
+    ctl.tick(3.0)
+    assert svc.kappa == 4 and svc.degraded is None
+
+
+def test_quality_burn_vetoes_and_lifts_degradation():
+    svc, slo = _StubService(kappa=4), _StubSLO()
+    ctl = AdmissionController(svc, AdmissionConfig(
+        high_water=64, low_water=16, deepen_water=16, kappa_max=32,
+        degrade_water=8, degrade_low_water=2), slo=slo)
+    svc.depth = 10                         # past degrade_water: ceiling on
+    ctl.tick(0.0)
+    assert svc.degraded is not None
+
+    slo.kinds = frozenset({"quality"})     # quality budget now burning
+    ctl.tick(1.0)
+    assert svc.degraded is None            # veto lifted the active ceiling
+    ctl.tick(2.0)                          # depth still high: veto holds it off
+    assert svc.degraded is None
+    assert svc.telemetry.slo_advisories["veto"] == 2
+    assert ctl.stats()["slo_burning"] == ["quality"]
+
+
+def test_controller_without_slo_is_depth_driven_only():
+    svc = _StubService(kappa=4)
+    ctl = AdmissionController(svc, AdmissionConfig(
+        high_water=64, low_water=16, deepen_water=16, kappa_max=32,
+        degrade_water=32, degrade_low_water=8))
+    assert ctl.slo is None
+    ctl.tick(0.0)
+    assert svc.kappa == 4 and "slo_burning" not in ctl.stats()
+
+
+# ---------------------------------------------------------------------------
+# deadline-aware shedding (service level)
+# ---------------------------------------------------------------------------
+@pytest.fixture(scope="module")
+def graph():
+    return holme_kim_powerlaw(400, m=4, seed=2)
+
+
+def test_deadline_exceeded_queries_shed_at_wave_launch(graph):
+    clk = FakeClock()
+    svc = PPRService(kappa=2, iterations=3, max_wait=100.0, time_fn=clk)
+    svc.register_graph("g", graph)
+    late = svc.submit(PPRQuery("g", 3, k=5, deadline=0.5))
+    ok = svc.submit(PPRQuery("g", 9, k=5))           # no deadline: immune
+    clk.t = 2.0                                      # both waited 2 s
+    svc.flush()
+    with pytest.raises(QueryRejected) as ei:
+        late.result()
+    assert ei.value.code == "deadline-exceeded"
+    assert ok.done() and len(ok.result().vertices) == 5
+    assert svc.telemetry.queries_deadline_shed == 1
+    assert svc.telemetry.queries_deadline_shed_by_graph == {"g": 1}
+    assert svc.telemetry.summary()["queries_deadline_shed"] == 1
+
+
+def test_deadline_flush_at_exact_budget_still_serves(graph):
+    """max_wait-triggered flushes launch *at* the deadline; the shed check is
+    strictly greater-than so those queries still serve."""
+    clk = FakeClock()
+    svc = PPRService(kappa=4, iterations=3, max_wait=0.5, time_fn=clk)
+    svc.register_graph("g", graph)
+    fut = svc.submit(PPRQuery("g", 3, k=5, deadline=0.5))
+    clk.t = 0.5                                      # exactly at budget
+    svc.poll()
+    assert fut.done() and len(fut.result().vertices) == 5
+    assert svc.telemetry.queries_deadline_shed == 0
+
+
+def test_deadline_shed_over_http_is_504(graph):
+    svc = PPRService(kappa=8, iterations=3, max_wait=0.05)
+    svc.register_graph("g", graph)
+    server = PPRHTTPServer(svc, pump_interval_s=0.005)
+
+    async def scenario():
+        await server.transport.start()     # pump paused: the wait is real
+        host, port = server.host, server.port
+        task = asyncio.create_task(http_request(
+            host, port, "POST", "/v1/ppr",
+            {"graph": "g", "vertex": 3, "k": 5, "deadline_s": 0.01}))
+        while svc.queue_depth() == 0:
+            await asyncio.sleep(0.002)
+        await asyncio.sleep(0.05)          # let the deadline lapse queued
+        server.pump.start()
+        status, _, payload = await task
+        assert status == 504
+        assert payload["code"] == "deadline-exceeded"
+        _, _, stats = await http_request(host, port, "GET", "/v1/stats")
+        assert stats["queries_deadline_shed"] == 1
+        await server.stop()
+
+    asyncio.run(scenario())
+
+
+# ---------------------------------------------------------------------------
+# e2e: paused-pump flood → latency SLO burns on the wire
+# ---------------------------------------------------------------------------
+def test_e2e_flood_burns_latency_slo_on_the_wire(graph):
+    """The acceptance e2e: flood a paused-pump server, then let it drain —
+    admission waits blow the (tiny) latency objective, the burn-rate monitor
+    transitions to *burning*, and all three surfaces agree: ``GET /v1/slo``,
+    the flight recorder (via ``recent_events``), and ``slo_burn_rate`` in
+    ``GET /v1/metrics``."""
+    specs = (SLOSpec("latency_p95", "latency", objective=0.000001,
+                     budget=0.05, fast_windows=(0.5, 2.0),
+                     slow_windows=(2.0, 8.0)),
+             SLOSpec("shed_rate", "shed", budget=0.05,
+                     fast_windows=(0.5, 2.0), slow_windows=(2.0, 8.0)))
+    svc = PPRService(kappa=4, iterations=3, max_wait=0.002, slo=specs)
+    svc.register_graph("g", graph, formats=[26])
+    svc.run_batch([PPRQuery("g", v, k=5) for v in range(4)])  # warm jit
+    server = PPRHTTPServer(svc, admission=AdmissionConfig(
+        high_water=64, low_water=8, deepen_water=16, kappa_max=8,
+        degrade_water=32, degrade_low_water=4), pump_interval_s=0.002)
+
+    async def scenario():
+        await server.transport.start()     # pump paused: queue builds
+        host, port = server.host, server.port
+        task = asyncio.gather(*[
+            http_request(host, port, "POST", "/v1/ppr",
+                         {"graph": "g", "vertex": int(v), "k": 5})
+            for v in range(100, 116)])    # disjoint from the warmup cache
+        deadline = asyncio.get_running_loop().time() + 10.0
+        while svc.queue_depth() < 16:
+            assert asyncio.get_running_loop().time() < deadline
+            await asyncio.sleep(0.002)
+        server.pump.start()                # drain: latencies include the wait
+        rs = await task
+        assert [r[0] for r in rs] == [200] * 16
+
+        # the monitor must reach burning while results carry the queue wait
+        deadline = asyncio.get_running_loop().time() + 10.0
+        status = None
+        while asyncio.get_running_loop().time() < deadline:
+            _, _, status = await http_request(host, port, "GET", "/v1/slo")
+            lat = next(s for s in status["specs"]
+                       if s["name"] == "latency_p95")
+            if lat["state"] == "burning":
+                break
+            await asyncio.sleep(0.01)
+        assert lat["state"] == "burning", format_slo(status)
+        assert "latency_p95" in status["burning"]
+        assert lat["windows"]["0.5"]["burn_rate"] >= 14.0
+        # the flight-recorder transition rides along in the same response
+        kinds = [e["kind"] for e in status["recent_events"]]
+        assert "slo_burning" in kinds
+        # ...and the burn gauge is on the Prometheus surface
+        st, _, text = await http_request(host, port, "GET", "/v1/metrics")
+        assert st == 200
+        assert 'slo_burn_rate{slo="latency_p95",window="0.5"}' in text
+        assert "slo_transitions_total" in text
+
+        # ?n= caps the event tail; a bad n is a clean 400
+        _, _, capped = await http_request(host, port, "GET", "/v1/slo?n=1")
+        assert len(capped["recent_events"]) <= 1
+        st, _, err = await http_request(host, port, "GET", "/v1/slo?n=zero")
+        assert st == 400 and err["code"] == "bad-request"
+        await server.stop()
+
+    asyncio.run(scenario())
+
+
+def test_slo_endpoint_404_when_monitoring_off(graph):
+    svc = PPRService(kappa=4, iterations=3)
+    svc.register_graph("g", graph)
+    server = PPRHTTPServer(svc, pump_interval_s=0.01)
+
+    async def scenario():
+        await server.start()
+        st, _, payload = await http_request(server.host, server.port,
+                                            "GET", "/v1/slo")
+        assert st == 404 and payload["code"] == "slo-monitoring-off"
+        await server.stop()
+
+    asyncio.run(scenario())
+
+
+def test_service_slo_true_uses_house_default_specs(graph):
+    svc = PPRService(kappa=4, iterations=3, slo=True)
+    assert [s.kind for s in svc.slo.specs] == ["latency", "shed", "quality"]
+    svc2 = PPRService(kappa=4, iterations=3)
+    assert svc2.slo is None                # off stays zero-cost
