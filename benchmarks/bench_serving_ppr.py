@@ -3,7 +3,10 @@
 The paper measures raw PPR execution time (Fig. 3); this measures the same
 datapath operated as a query service — κ-batch amortization shows up directly
 as queries/s scaling with κ, and reduced precision as lower per-wave latency
-(the edge-stream byte model of benchmarks/bench_ppr.py).
+(the edge-stream byte model of benchmarks/bench_ppr.py).  Each (κ, precision)
+point runs once per engine family — "single" (composed jax-ops SpMV) and
+"pallas" (one fused kernel launch per iteration) — so the composed-vs-fused
+gap is a committed row pair in BENCH_serving_ppr.json.
 
     PYTHONPATH=src python benchmarks/bench_serving_ppr.py [--scale 0.02] [--dry-run]
 
@@ -24,49 +27,65 @@ from repro.ppr_serving.telemetry import WAVE_STAGES
 
 KAPPAS = (1, 4, 8, 16)
 PRECISIONS = (None, 26, 20)          # f32 reference + paper's widest/narrowest
+ENGINE_FAMILIES = ("single", "pallas")   # composed jax-ops vs fused launch
 
 
 def _precision_label(p) -> str:
     return "f32" if p is None else f"q{p}"
 
 
+def _engine_key(family: str, prec) -> str:
+    base = "float" if prec is None else "fixed"
+    return base if family == "single" else f"{family}_{base}"
+
+
 def run(scale: float = 0.02, n_queries: int = 64, iterations: int = 10,
-        kappas=KAPPAS, precisions=PRECISIONS, seed: int = 0) -> List[Dict]:
+        kappas=KAPPAS, precisions=PRECISIONS, engines=ENGINE_FAMILIES,
+        seed: int = 0) -> List[Dict]:
     g = holme_kim_powerlaw(max(128, int(128000 * scale)), m=3, seed=1)
     rng = np.random.default_rng(seed)
     users = rng.integers(0, g.num_vertices, n_queries)
     rows: List[Dict] = []
     for kappa in kappas:
         for prec in precisions:
-            svc = PPRService(kappa=kappa, iterations=iterations,
-                             cache_capacity=0)      # measure compute, not cache
-            svc.register_graph("g", g, formats=[p for p in (prec,) if p])
-            queries = [PPRQuery("g", int(v), k=10, precision=prec) for v in users]
-            svc.run_batch(queries[: min(kappa, n_queries)])   # warm up jit
-            svc = PPRService(kappa=kappa, iterations=iterations, cache_capacity=0)
-            svc.register_graph("g", g, formats=[p for p in (prec,) if p])
-            svc.run_batch(queries)
-            s = svc.telemetry_summary()
-            engine_key = "float" if prec is None else "fixed"
-            rows.append({
-                "kappa": kappa,
-                "precision": _precision_label(prec),
-                "engine": engine_key,
-                "V": g.num_vertices,
-                "E": g.num_edges,
-                "queries": n_queries,
-                "queries_per_s": s["queries_per_s"],
-                "p50_s": s["wave_latency_p50_s"],
-                "p95_s": s["wave_latency_p95_s"],
-                "engine_mean_s": s.get(f"engine_{engine_key}_latency_mean_s", 0.0),
-                "engine_p95_s": s.get(f"engine_{engine_key}_latency_p95_s", 0.0),
-                "occupancy": s["mean_occupancy"],
-                # per-stage wave timing (obs registry): where the wave's
-                # latency went — plan/warm_start/iterate/topk/resolve
-                **{f"stage_{stage}_mean_s": s.get(f"stage_{stage}_mean_s", 0.0)
-                   for stage in WAVE_STAGES},
-            })
+            for family in engines:
+                rows.append(_run_point(g, kappa, prec, family, users,
+                                       n_queries, iterations))
     return rows
+
+
+def _run_point(g, kappa: int, prec, family: str, users, n_queries: int,
+               iterations: int) -> Dict:
+    formats = [p for p in (prec,) if p]
+    svc = PPRService(kappa=kappa, iterations=iterations,
+                     cache_capacity=0)      # measure compute, not cache
+    svc.register_graph("g", g, formats=formats, engine=family)
+    queries = [PPRQuery("g", int(v), k=10, precision=prec) for v in users]
+    svc.run_batch(queries[: min(kappa, n_queries)])   # warm up jit
+    svc = PPRService(kappa=kappa, iterations=iterations, cache_capacity=0)
+    svc.register_graph("g", g, formats=formats, engine=family)
+    svc.run_batch(queries)
+    s = svc.telemetry_summary()
+    engine_key = _engine_key(family, prec)
+    return {
+        "kappa": kappa,
+        "precision": _precision_label(prec),
+        "family": family,
+        "engine": engine_key,
+        "V": g.num_vertices,
+        "E": g.num_edges,
+        "queries": n_queries,
+        "queries_per_s": s["queries_per_s"],
+        "p50_s": s["wave_latency_p50_s"],
+        "p95_s": s["wave_latency_p95_s"],
+        "engine_mean_s": s.get(f"engine_{engine_key}_latency_mean_s", 0.0),
+        "engine_p95_s": s.get(f"engine_{engine_key}_latency_p95_s", 0.0),
+        "occupancy": s["mean_occupancy"],
+        # per-stage wave timing (obs registry): where the wave's
+        # latency went — plan/warm_start/iterate/topk/resolve
+        **{f"stage_{stage}_mean_s": s.get(f"stage_{stage}_mean_s", 0.0)
+           for stage in WAVE_STAGES},
+    }
 
 
 def main(scale: float = 0.02, dry_run: bool = False):
@@ -77,7 +96,8 @@ def main(scale: float = 0.02, dry_run: bool = False):
     print("# serving: name,us_per_call,derived")
     for r in rows:
         us_per_query = 1e6 / r["queries_per_s"] if r["queries_per_s"] else 0.0
-        print(f"serving_k{r['kappa']}_{r['precision']},{us_per_query:.0f},"
+        print(f"serving_k{r['kappa']}_{r['precision']}_{r['family']},"
+              f"{us_per_query:.0f},"
               f"qps={r['queries_per_s']:.1f}"
               f";p50_us={r['p50_s']*1e6:.0f};p95_us={r['p95_s']*1e6:.0f}"
               f";occupancy={r['occupancy']:.2f}"

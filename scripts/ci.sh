@@ -118,6 +118,27 @@ echo "== examples smoke (ported to the futures API, deprecation-clean) =="
 python -W error::DeprecationWarning:__main__ examples/quickstart.py
 python -W error::DeprecationWarning:__main__ examples/http_serving.py
 
+echo "== pallas engine family (interpret mode; skipped if pallas unavailable) =="
+# the fused-kernel suite runs under interpret=True so it is meaningful on
+# CPU-only CI hosts; a host whose jax build lacks pallas skips cleanly
+# (probe exit 3 = ImportError), anything else fails the gate
+pallas_rc=0
+python - <<'EOF' || pallas_rc=$?
+import sys
+try:
+    import jax.experimental.pallas  # noqa: F401
+except ImportError:
+    sys.exit(3)
+EOF
+if [ "$pallas_rc" -eq 0 ]; then
+    python -m pytest -q tests/test_pallas_engine.py
+elif [ "$pallas_rc" -eq 3 ]; then
+    echo "skip: jax.experimental.pallas not importable on this host"
+else
+    echo "FATAL: pallas probe failed with unexpected status $pallas_rc" >&2
+    exit 1
+fi
+
 echo "== smoke + baselines: benchmark sweep (dry run, JSON into repo root) =="
 # --check gates the sweep: every ran section must leave a fresh parseable
 # non-empty BENCH_<section>.json, and a skipped section must not leave a

@@ -11,8 +11,13 @@ the blessed conversion helpers.  These rules make the conventions checkable:
   over a raw-domain operand without an ``.astype(int32/int64)`` width guard.
 - **FXP002 shift-discards-bits** — ``x << k`` (constant ``k``) where the
   inferred width of ``x`` plus ``k`` exceeds 32: set bits fall off the top of
-  the uint32 lane.  Carry-tracked shifts (the limb multiplier) suppress this
-  with an ``allow`` comment explaining how the lost bits are reconstructed.
+  the uint32 lane.  Width inference is interprocedural within a module
+  (``_WidthEnv``): a call to a top-level local function resolves to the max
+  width of its returns with parameters seeded from the call site, so limb
+  helpers like ``_fixed_mul_u32`` type through their call sites instead of
+  needing blanket suppressions.  Carry-tracked shifts (the limb multiplier)
+  suppress this with an ``allow`` comment explaining how the lost bits are
+  reconstructed.
 - **FXP003 raw-domain-discipline** — ``*`` between two raw operands outside
   ``QFormat.mul`` (raw×raw needs the limb decomposition), or arithmetic
   mixing a raw operand with a float literal (scale confusion).
@@ -164,9 +169,12 @@ class RawAccumulationWidth(Rule):
 _WIDTH_UNKNOWN = 32
 
 
-def _infer_width(node: ast.AST, local_widths: Dict[str, int]) -> int:
+def _infer_width(node: ast.AST, local_widths: Dict[str, int],
+                 env: Optional["_WidthEnv"] = None) -> int:
     """Upper bound on the number of significant bits of ``node`` in a uint32
-    lane.  Unknown expressions are assumed full-width (32)."""
+    lane.  Unknown expressions are assumed full-width (32).  With a
+    ``_WidthEnv``, calls to module-local functions resolve to the callee's
+    return width (params seeded from the call site's argument widths)."""
     if isinstance(node, ast.Constant) and isinstance(node.value, int):
         return max(node.value.bit_length(), 1)
     if isinstance(node, ast.Name):
@@ -176,12 +184,16 @@ def _infer_width(node: ast.AST, local_widths: Dict[str, int]) -> int:
     if isinstance(node, ast.Call):
         # (a < b).astype(u32) — a 0/1 mask keeps width 1
         if isinstance(node.func, ast.Attribute) and node.func.attr == "astype":
-            return _infer_width(node.func.value, local_widths)
+            return _infer_width(node.func.value, local_widths, env)
+        if env is not None:
+            w = env.call_return_width(node, local_widths)
+            if w is not None:
+                return w
         return _WIDTH_UNKNOWN
     if isinstance(node, ast.BinOp):
         op = node.op
-        lw = _infer_width(node.left, local_widths)
-        rw = _infer_width(node.right, local_widths)
+        lw = _infer_width(node.left, local_widths, env)
+        rw = _infer_width(node.right, local_widths, env)
         if isinstance(op, ast.BitAnd):
             # masking bounds the result by the narrower side
             for side in (node.left, node.right):
@@ -203,8 +215,146 @@ def _infer_width(node: ast.AST, local_widths: Dict[str, int]) -> int:
         if isinstance(op, (ast.BitOr, ast.BitXor)):
             return max(lw, rw)
     if isinstance(node, ast.Subscript):
-        return _infer_width(node.value, local_widths)
+        return _infer_width(node.value, local_widths, env)
     return _WIDTH_UNKNOWN
+
+
+def _own_returns(fn: ast.AST):
+    """``return`` expressions belonging to ``fn`` itself (nested defs and
+    lambdas have their own return scopes and are not descended into)."""
+    rets = []
+    stack = list(getattr(fn, "body", []))
+    while stack:
+        n = stack.pop()
+        if isinstance(n, (ast.FunctionDef, ast.AsyncFunctionDef, ast.Lambda)):
+            continue
+        if isinstance(n, ast.Return):
+            if n.value is not None:
+                rets.append(n.value)
+            continue
+        stack.extend(ast.iter_child_nodes(n))
+    return rets
+
+
+class _WidthEnv:
+    """Cross-function width resolution within one module.
+
+    FXP002's width model is intra-procedural by default; limb helpers like
+    ``_fixed_mul_u32`` would otherwise force either blanket suppressions at
+    every call site or blind 32-bit assumptions.  This environment resolves a
+    call to a *top-level same-module* function by seeding the callee's
+    parameters with the call site's inferred argument widths (plus the module
+    constants) and taking the max width over the callee's own ``return``
+    expressions.  Recursion/cycles and deep chains degrade to unknown
+    (``max_depth``), never to a wrong bound.
+    """
+
+    max_depth = 4
+
+    def __init__(self, tree: ast.AST, module_widths: Dict[str, int]):
+        self.module_widths = module_widths
+        self.funcs: Dict[str, ast.FunctionDef] = {
+            stmt.name: stmt for stmt in getattr(tree, "body", [])
+            if isinstance(stmt, ast.FunctionDef)}
+        self._active: list = []
+
+    def _resolve(self, node: ast.Call) -> Optional[ast.FunctionDef]:
+        name = A.call_name(node)
+        if not name:
+            return None
+        fn = self.funcs.get(name.rsplit(".", 1)[-1])
+        if fn is None or fn.name in self._active \
+                or len(self._active) >= self.max_depth:
+            return None
+        return fn
+
+    @staticmethod
+    def _params(fn: ast.FunctionDef):
+        return [a.arg for a in fn.args.posonlyargs + fn.args.args]
+
+    def call_return_width(self, node: ast.Call,
+                          caller_widths: Dict[str, int]) -> Optional[int]:
+        """Max width over the callee's returns, or None when unresolvable."""
+        fn = self._resolve(node)
+        if fn is None:
+            return None
+        seed = dict(self.module_widths)
+        for p, a in zip(self._params(fn), node.args):
+            seed[p] = _infer_width(a, caller_widths, self)
+        for kw in node.keywords or []:
+            if kw.arg:
+                seed[kw.arg] = _infer_width(kw.value, caller_widths, self)
+        self._active.append(fn.name)
+        try:
+            rets = _own_returns(fn)
+            if not rets:
+                return None
+            widths = _local_widths(fn, seed, self)
+            return max(_infer_width(r, widths, self) for r in rets)
+        finally:
+            self._active.pop()
+
+    def call_known(self, node: ast.Call, caller_widths: Dict[str, int]) -> bool:
+        """True when every return expression of the callee has a derived
+        width, with only the *known* call-site arguments blessing params."""
+        fn = self._resolve(node)
+        if fn is None:
+            return False
+        seed = dict(self.module_widths)
+        for p, a in zip(self._params(fn), node.args):
+            if _width_known(a, caller_widths, self):
+                seed[p] = _infer_width(a, caller_widths, self)
+        for kw in node.keywords or []:
+            if kw.arg and _width_known(kw.value, caller_widths, self):
+                seed[kw.arg] = _infer_width(kw.value, caller_widths, self)
+        self._active.append(fn.name)
+        try:
+            rets = _own_returns(fn)
+            if not rets:
+                return False
+            widths = _local_widths(fn, seed, self)
+            return all(_width_known(r, widths, self) for r in rets)
+        finally:
+            self._active.pop()
+
+
+def _width_known(node: ast.AST, widths: Dict[str, int],
+                 env: Optional[_WidthEnv] = None) -> bool:
+    """Only flag shifts whose operand width was actually derived.
+
+    Structural recursion replacing the old every-Name-resolved walk: a bare
+    Name must have an inferred width (an unresolved one would default to 32
+    and spray false positives over arbitrary shifts), a constant mask blesses
+    a BitAnd regardless of the other side (the width *is* bounded by the
+    mask), and a call to a resolvable module-local function is known iff its
+    returns are (``_WidthEnv.call_known``)."""
+    if isinstance(node, ast.Constant):
+        return isinstance(node.value, int)
+    if isinstance(node, ast.Name):
+        return node.id in widths
+    if isinstance(node, ast.Compare):
+        return True
+    if isinstance(node, ast.BinOp):
+        if isinstance(node.op, ast.BitAnd):
+            if any(isinstance(s, ast.Constant) and isinstance(s.value, int)
+                   for s in (node.left, node.right)):
+                return True
+        if isinstance(node.op, (ast.RShift, ast.LShift)) \
+                and not (isinstance(node.right, ast.Constant)
+                         and isinstance(node.right.value, int)):
+            # symbolic shift amounts keep the old all-names-resolved demand
+            if not _width_known(node.right, widths, env):
+                return False
+            return _width_known(node.left, widths, env)
+        return (_width_known(node.left, widths, env)
+                and _width_known(node.right, widths, env))
+    if isinstance(node, ast.Subscript):
+        return _width_known(node.value, widths, env)
+    if isinstance(node, ast.Call):
+        if isinstance(node.func, ast.Attribute) and node.func.attr == "astype":
+            return _width_known(node.func.value, widths, env)
+        return env is not None and env.call_known(node, widths)
+    return False
 
 
 def _module_const_widths(tree: ast.AST) -> Dict[str, int]:
@@ -223,14 +373,15 @@ def _module_const_widths(tree: ast.AST) -> Dict[str, int]:
     return widths
 
 
-def _local_widths(fn: ast.AST, seed: Optional[Dict[str, int]] = None) -> Dict[str, int]:
+def _local_widths(fn: ast.AST, seed: Optional[Dict[str, int]] = None,
+                  env: Optional["_WidthEnv"] = None) -> Dict[str, int]:
     """Forward pass recording each single-assignment local's inferred width."""
     widths: Dict[str, int] = dict(seed or {})
     for stmt in ast.walk(fn):
         if isinstance(stmt, ast.Assign) and len(stmt.targets) == 1:
             tgt = stmt.targets[0]
             if isinstance(tgt, ast.Name):
-                widths[tgt.id] = _infer_width(stmt.value, widths)
+                widths[tgt.id] = _infer_width(stmt.value, widths, env)
     return widths
 
 
@@ -239,32 +390,25 @@ class ShiftDiscardsBits(Rule):
     id = "FXP002"
     name = "shift-discards-bits"
     doc = ("x << k where the inferred width of x plus k exceeds the 32-bit "
-           "lane: high bits are silently dropped.  Carry-tracked shifts must "
-           "carry an allow comment naming where the bits are recovered.")
-
-    @staticmethod
-    def _width_known(node: ast.AST, widths: Dict[str, int]) -> bool:
-        """Only flag shifts whose operand width we actually derived — every
-        bare Name must have an inferred local width (an unresolved name would
-        default to 32 and spray false positives over arbitrary shifts)."""
-        for n in ast.walk(node):
-            if isinstance(n, ast.Name) and n.id not in widths:
-                return False
-        return True
+           "lane: high bits are silently dropped.  Width inference crosses "
+           "same-module function boundaries (call-site argument widths seed "
+           "the callee).  Carry-tracked shifts must carry an allow comment "
+           "naming where the bits are recovered.")
 
     def check(self, ctx: FileContext) -> Iterator[Finding]:
         module_widths = _module_const_widths(ctx.tree)
+        env = _WidthEnv(ctx.tree, module_widths)
         for fn in A.func_defs(ctx.tree):
-            widths = _local_widths(fn, module_widths)
+            widths = _local_widths(fn, module_widths, env)
             for node in ast.walk(fn):
                 if not (isinstance(node, ast.BinOp)
                         and isinstance(node.op, ast.LShift)
                         and isinstance(node.right, ast.Constant)
                         and isinstance(node.right.value, int)):
                     continue
-                if not self._width_known(node.left, widths):
+                if not _width_known(node.left, widths, env):
                     continue
-                w = _infer_width(node.left, widths)
+                w = _infer_width(node.left, widths, env)
                 k = node.right.value
                 if w + k > 32:
                     yield self.finding(

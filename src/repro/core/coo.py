@@ -3,7 +3,7 @@
 The paper streams the graph as three equal arrays (x=dst, y=src, val) in packets of
 B edges.  On TPU we additionally 2-D block the matrix by (dst_tile, src_tile) so the
 Pallas kernel keeps one P_t source slice and one accumulator slice in VMEM — the
-URAM analogue (DESIGN.md §2).
+URAM analogue (see the kernel mapping table in ``repro.kernels.coo_spmv``).
 
 Padding discipline: sentinel edges have val=0 and x=y=0 inside their block, so they
 contribute nothing while keeping every block a whole number of packets.
@@ -272,7 +272,8 @@ class BlockedCOO:
     def index_dtype(self):
         """Block-local indices fit 16 bits whenever v_tile ≤ 65536 — a
         beyond-paper compression the 2-D blocking enables: the edge stream
-        drops from 8 B to 4 B of indices per edge (EXPERIMENTS.md §Perf)."""
+        drops from 8 B to 4 B of indices per edge (halving the streaming
+        bandwidth term in the roofline note of ``repro.kernels.coo_spmv``)."""
         return np.uint16 if self.v_tile <= (1 << 16) else np.int32
 
     def packed_indices(self):

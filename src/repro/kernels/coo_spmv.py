@@ -1,6 +1,7 @@
 """Pallas TPU kernel: streaming COO SpMM (the paper's §4.1.1 pipeline).
 
-TPU mapping of the FPGA architecture (DESIGN.md §2):
+TPU mapping of the FPGA architecture (paper §4.1.1; see PAPER.md for the
+abstract and README.md "Architecture map" for where this sits in the repo):
 
   FPGA                                  TPU (this kernel)
   ----------------------------------    ----------------------------------------
@@ -22,10 +23,12 @@ packet its (dst_block, src_block) and a first-packet-of-dst-block flag.
 Packets are dst-major sorted, so each output block is revisited consecutively
 — the same "write each block exactly once" discipline as the paper's FSM.
 
-Roofline choice of tile sizes (§Perf): the one-hot matmul costs
-2·v_tile·K flop/edge vs 12 B/edge of HBM traffic.  Compute-bound iff
-2·v_tile·K/12 > 240 flop/B (v5e ridge) ⇒ keep v_tile·K ≲ 1440·K... see
-EXPERIMENTS.md §Perf for the measured iteration.
+Roofline choice of tile sizes: the one-hot matmul costs 2·v_tile·K flop/edge
+vs 12 B/edge of HBM traffic, so the kernel turns compute-bound once
+2·v_tile·K/12 > 240 flop/B (v5e ridge), i.e. keep v_tile·K ≲ 1440 to stay
+on the bandwidth-bound side the paper's streaming argument assumes.
+Measured iteration latencies live in the committed BENCH_*.json baselines
+(benchmarks/bench_spmv.py writes the SpMV section).
 """
 from __future__ import annotations
 

@@ -98,6 +98,9 @@ from repro.ppr_serving.cache import LRUCache
 from repro.ppr_serving.engine import (
     FixedEngine,
     FloatEngine,
+    PallasFixedEngine,
+    PallasFloatEngine,
+    PallasRegisteredGraph,
     ShardedFixedEngine,
     ShardedFloatEngine,
     WaveEngine,
@@ -136,11 +139,12 @@ __all__ = [
     "PPRService", "PPRQuery", "Recommendation", "PPRFuture", "QueryRejected",
     "PPRHTTPServer", "ServingApp", "AdmissionConfig", "AdmissionController",
     "WavePump",
-    "RegisteredGraph", "ShardedRegisteredGraph",
+    "RegisteredGraph", "ShardedRegisteredGraph", "PallasRegisteredGraph",
     "WaveEngine", "WavePlan",
     "register_engine", "get_engine", "engine_for", "family_members",
     "engine_names", "engine_families",
     "FloatEngine", "FixedEngine", "ShardedFloatEngine", "ShardedFixedEngine",
+    "PallasFloatEngine", "PallasFixedEngine",
     "normalize_precision", "precision_key", "AUTO_KEY", "FLOAT_KEY",
     "SINGLE_DEVICE_KEY",
     "WaveScheduler", "Wave",

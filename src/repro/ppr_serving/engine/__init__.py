@@ -17,12 +17,13 @@ reduction.  ``prepare`` materializes device state at registration;
 ``on_delta`` refreshes it after an edge-delta merge (incremental
 requantization upload, per-bucket repartition).
 
-Engines register by name into *families* ("single", "sharded") with one
-float and one fixed member; ``PPRService.register_graph(..., engine=...)``
-selects a family, and every wave resolves to the member for its precision.
-New datapaths — the multi-channel layouts of arXiv 2103.04808, sharded
-top-K, P_t sharding, future Pallas kernels — plug in as new engines instead
-of new branches in the service.
+Engines register by name into *families* ("single", "sharded", "pallas")
+with one float and one fixed member; ``PPRService.register_graph(...,
+engine=...)`` selects a family, and every wave resolves to the member for
+its precision.  The "pallas" family is the paper's fused single-launch
+datapath (``repro.kernels.fused_ppr``); further datapaths — the
+multi-channel layouts of arXiv 2103.04808, sharded top-K, P_t sharding —
+plug in as new engines instead of new branches in the service.
 """
 from repro.ppr_serving.engine.base import (
     WaveEngine,
@@ -36,6 +37,11 @@ from repro.ppr_serving.engine.base import (
 )
 from repro.ppr_serving.engine.single import FixedEngine, FloatEngine
 from repro.ppr_serving.engine.sharded import ShardedFixedEngine, ShardedFloatEngine
+from repro.ppr_serving.engine.pallas import (
+    PallasFixedEngine,
+    PallasFloatEngine,
+    PallasRegisteredGraph,
+)
 
 __all__ = [
     "WaveEngine", "WavePlan",
@@ -43,4 +49,5 @@ __all__ = [
     "engine_names", "engine_families",
     "FloatEngine", "FixedEngine",
     "ShardedFloatEngine", "ShardedFixedEngine",
+    "PallasFloatEngine", "PallasFixedEngine", "PallasRegisteredGraph",
 ]

@@ -88,6 +88,64 @@ def test_fxp002_seeds_module_level_masks(tmp_path):
     assert rule_ids(r) == ["FXP002"]
 
 
+def test_fxp002_infers_width_across_local_calls(tmp_path):
+    # the callee's return width is resolved from the call site's argument
+    # widths — one call overflows the lane, the narrower one fits
+    r = run(tmp_path, """
+        def widen(v):
+            return v << 4
+
+        def overflows():
+            a = 0x3FFFFFF
+            b = widen(a)
+            return b << 6
+
+        def fits():
+            a = 0xFFFF
+            b = widen(a)
+            return b << 6
+    """, "FXP002")
+    assert rule_ids(r) == ["FXP002"]
+    assert r.findings[0].line > 0
+    assert "~30-bit" in r.findings[0].message
+
+
+def test_fxp002_quiet_on_unresolvable_callee(tmp_path):
+    # imported/external callees have no derivable return width: stay silent
+    # instead of assuming full width
+    r = run(tmp_path, """
+        def lift(u):
+            return external(u) << 30
+    """, "FXP002")
+    assert rule_ids(r) == []
+
+
+def test_fxp002_constant_mask_blesses_unknown_operand(tmp_path):
+    # (unknown & 0xFF) is bounded by the mask — the shift is checkable even
+    # though the operand itself is unresolved, and 8 + 30 overflows
+    r = run(tmp_path, """
+        def lift(u):
+            return (u & 0xFF) << 30
+
+        def fits(u):
+            return (u & 0xFF) << 20
+    """, "FXP002")
+    assert rule_ids(r) == ["FXP002"]
+
+
+def test_fxp002_recursive_callee_degrades_to_unknown(tmp_path):
+    # self-recursion must neither loop nor produce a bogus bound
+    r = run(tmp_path, """
+        def spin(v):
+            return spin(v << 8)
+
+        def lift():
+            a = 0x3FFFFFF
+            return spin(a) << 10
+    """, "FXP002")
+    assert rule_ids(r) == []
+
+
 def test_fxp003_fires_on_raw_times_raw_outside_mul(tmp_path):
     r = run(tmp_path, """
         def combine(a_raw, b_raw):
